@@ -1,0 +1,3 @@
+"""Shim: the analyzer lives in repro.perf.hlo_analysis (importable from src)."""
+from repro.perf.hlo_analysis import *  # noqa: F401,F403
+from repro.perf.hlo_analysis import analyze, analyze_compiled  # noqa: F401

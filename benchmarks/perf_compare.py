@@ -1,0 +1,50 @@
+"""Before/after comparison of dry-run artifact sets (the §Perf evidence).
+
+  PYTHONPATH=src:. python -m benchmarks.perf_compare \
+      experiments/dryrun_baseline experiments/dryrun
+
+Prints per-cell collective/flops/memory deltas between the paper-faithful
+baseline sweep and the optimized sweep.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+
+def load(d: Path) -> dict:
+    out = {}
+    for p in d.glob("*.json"):
+        r = json.loads(p.read_text())
+        if r.get("status") == "ok" and not r.get("tag"):
+            out[(r["arch"], r["shape"], r["mesh"])] = r
+    return out
+
+
+def main():
+    base_dir = Path(sys.argv[1]) if len(sys.argv) > 1 else \
+        Path("experiments/dryrun_baseline")
+    new_dir = Path(sys.argv[2]) if len(sys.argv) > 2 else \
+        Path("experiments/dryrun")
+    base, new = load(base_dir), load(new_dir)
+    keys = sorted(set(base) & set(new))
+    print("| arch | shape | mesh | coll B before | after | Δ | temp GB before | after |")
+    print("|" + "---|" * 8)
+    tot_b = tot_n = 0.0
+    for k in keys:
+        b, n = base[k], new[k]
+        cb = b["analysis"]["collective_bytes"]
+        cn = n["analysis"]["collective_bytes"]
+        tb = b.get("memory_analysis", {}).get("temp_size_in_bytes", 0) / 1e9
+        tn = n.get("memory_analysis", {}).get("temp_size_in_bytes", 0) / 1e9
+        tot_b += cb
+        tot_n += cn
+        print(f"| {k[0]} | {k[1]} | {k[2]} | {cb:.2e} | {cn:.2e} "
+              f"| {(cn-cb)/max(cb,1):+.0%} | {tb:.1f} | {tn:.1f} |")
+    print(f"\ntotal collective bytes: {tot_b:.3e} -> {tot_n:.3e} "
+          f"({(tot_n-tot_b)/tot_b:+.1%})")
+
+
+if __name__ == "__main__":
+    main()

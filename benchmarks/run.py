@@ -1,0 +1,169 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus human-readable detail to
+stderr-ish comment lines).  Usage:
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+
+Tables:
+  fig8_scalability      paper Fig. 8: speedup vs #cores, w in {10, 100}
+  tbl1_fig9_skew        paper Table 1 + Fig. 9: Gini vs runtime
+  sec52_jobsn_vs_repsn  paper §5.2: JobSN vs RepSN (+ SRP baseline)
+  kernels               Pallas band kernels vs jnp oracle (CPU timings)
+  dedup_e2e             end-to-end corpus dedup throughput + SN-vs-n^2 factor
+  roofline              summary of dry-run roofline terms (needs artifacts)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+
+def _row(name: str, us: float, derived: str):
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def fig8_scalability(quick: bool):
+    from benchmarks._subproc import run_with_devices
+    n = 20_000 if quick else 80_000
+    windows = [10] if quick else [10, 100]
+    base = {}
+    for w in windows:
+        for r in ([1, 4] if quick else [1, 2, 4, 8]):
+            res = run_with_devices(
+                r, "benchmarks.bench_sn", "scalability_body",
+                {"n": n, "w": w, "reps": 2 if quick else 3})
+            key = f"fig8_w{w}_r{r}"
+            if r == 1:
+                base[w] = res["seconds"]
+            speedup = base[w] / res["seconds"]
+            _row(key, res["seconds"] * 1e6,
+                 f"wall_speedup={speedup:.2f};"
+                 f"critical_path_speedup={res['work_speedup']:.2f};"
+                 f"pairs={res['pairs']}")
+
+
+def tbl1_fig9_skew(quick: bool):
+    from benchmarks._subproc import run_with_devices
+    n = 20_000 if quick else 60_000
+    strategies = ["manual", "even", "even_40", "even_85"] if quick else \
+        ["manual", "even", "even_40", "even_55", "even_70", "even_85"]
+    for s in strategies:
+        res = run_with_devices(
+            8, "benchmarks.bench_sn", "skew_body",
+            {"n": n, "w": 20, "strategy": s, "reps": 2 if quick else 3})
+        _row(f"fig9_{s}", res["seconds"] * 1e6,
+             f"gini={res['gini']};max_load={res['max_load']};"
+             f"pairs={res['pairs']}")
+
+
+def sec52_jobsn_vs_repsn(quick: bool):
+    from benchmarks._subproc import run_with_devices
+    n = 20_000 if quick else 60_000
+    res = run_with_devices(
+        8, "benchmarks.bench_sn", "jobsn_vs_repsn_body",
+        {"n": n, "w": 20 if quick else 50, "reps": 2 if quick else 3},
+        timeout=2400)
+    for variant, v in res.items():
+        _row(f"sec52_{variant}", v["seconds"] * 1e6,
+             f"pairs={v['pairs']};coll_bytes={v['collective_bytes']:.2e};"
+             f"permutes={v['permute_count']}")
+
+
+def kernels(quick: bool):
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops, ref
+    rng = np.random.default_rng(0)
+    m, f, w = (2048, 128, 64) if quick else (8192, 128, 128)
+    feat = jnp.asarray(rng.normal(size=(m, f)).astype(np.float32))
+
+    def timeit(fn, *args, reps=5, **kw):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            jax.block_until_ready(fn(*args, **kw))
+        return (time.perf_counter() - t0) / reps * 1e6
+
+    us_ref = timeit(ref.banded_sim_ref, feat, window=w)
+    flops = 2.0 * m * w * f
+    _row("kernel_banded_sim_ref_jnp", us_ref,
+         f"gflops={flops/us_ref/1e3:.2f}")
+    us_k = timeit(ops.banded_dot_band, feat, window=w, interpret=True)
+    _row("kernel_banded_sim_pallas_interp", us_k,
+         "interpret-mode(correctness-path; native on TPU)")
+
+    sig = jnp.asarray(rng.integers(0, 2**32, size=(m, 8),
+                                   dtype=np.uint64).astype(np.uint32))
+    us_j = timeit(ref.jaccard_band_ref, sig, window=w)
+    _row("kernel_jaccard_ref_jnp", us_j, f"pairs_per_s={m*w/us_j*1e6:.2e}")
+
+    bh, s, d, win = (4, 1024, 64, 256) if quick else (8, 4096, 128, 1024)
+    q = jnp.asarray(rng.normal(size=(bh, s, d)).astype(np.float32))
+    us_a = timeit(ref.local_attention_ref, q, q, q, window=win, reps=3)
+    _row("kernel_local_attn_ref_jnp", us_a,
+         f"gflops={4*bh*s*win*d/us_a/1e3:.2f}")
+
+
+def dedup_e2e(quick: bool):
+    from repro.data.corpus import dedup_corpus, synth_corpus
+    n = 4096 if quick else 16384
+    docs = synth_corpus(0, n_docs=n, doc_len=64, vocab=1000, dup_frac=0.25)
+    t0 = time.perf_counter()
+    res = dedup_corpus(docs, r=8, window=10)
+    dt = time.perf_counter() - t0
+    naive_cmp = n * (n - 1) / 2
+    sn_cmp = n * 9
+    _row("dedup_e2e", dt * 1e6,
+         f"docs_per_s={n/dt:.0f};dropped={res.n_dropped};"
+         f"cmp_reduction={naive_cmp/sn_cmp:.0f}x;gini={res.gini:.2f}")
+
+
+def roofline(quick: bool):
+    from benchmarks.roofline import load_all
+    rows = load_all()
+    if not rows:
+        _row("roofline", 0.0, "no-dryrun-artifacts")
+        return
+    worst = min(rows, key=lambda r: r["roofline_fraction"])
+    for r in rows:
+        _row(f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+             max(r["t_compute_s"], r["t_memory_s"],
+                 r["t_collective_s"]) * 1e6,
+             f"dominant={r['dominant']};frac={r['roofline_fraction']:.2f};"
+             f"useful={r['useful_ratio']:.2f}")
+    _row("roofline_worst_cell", 0.0,
+         f"{worst['arch']}/{worst['shape']}:{worst['roofline_fraction']:.2f}")
+
+
+TABLES = {
+    "fig8_scalability": fig8_scalability,
+    "tbl1_fig9_skew": tbl1_fig9_skew,
+    "sec52_jobsn_vs_repsn": sec52_jobsn_vs_repsn,
+    "kernels": kernels,
+    "dedup_e2e": dedup_e2e,
+    "roofline": roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, fn in TABLES.items():
+        if args.only and name != args.only:
+            continue
+        try:
+            fn(args.quick)
+        except Exception as e:  # noqa: BLE001 — keep the suite running
+            _row(name, -1.0, f"ERROR:{type(e).__name__}:{e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Batched serving example: prefill a batch of prompts, decode greedily.
+
+  PYTHONPATH=src python examples/serve_lm.py [--arch mixtral-8x22b]
+
+Uses the reduced (smoke) config of the chosen arch so it runs on CPU; the
+identical engine lowers for the production mesh in the decode dry-run cells.
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, smoke_variant
+from repro.models import lm
+from repro.serve.engine import ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x22b", choices=sorted(ARCHS))
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = smoke_variant(ARCHS[args.arch])
+    params = lm.lm_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    eng = ServeEngine(cfg=cfg, params=params,
+                      max_len=args.prompt_len + args.new_tokens,
+                      batch=args.batch)
+    prompts = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (args.batch, args.prompt_len)).astype(np.int32)
+
+    t0 = time.perf_counter()
+    toks = eng.generate(prompts, n_new=args.new_tokens)
+    dt = time.perf_counter() - t0
+    print(f"arch={args.arch} generated {toks.shape} in {dt:.2f}s "
+          f"({args.batch * args.new_tokens / dt:.1f} tok/s incl. compile)")
+    print("first sequence:", toks[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

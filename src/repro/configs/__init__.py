@@ -1,0 +1,23 @@
+"""Config registry: ``get_config(name)`` and per-arch modules."""
+from repro.configs.base import (ModelConfig, MoEConfig, RunConfig,
+                                ShapeConfig, SHAPES, smoke_variant)
+from repro.configs.archs import ARCHS, LONG_CONTEXT_OK
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def cells(include_skipped: bool = False):
+    """All (arch, shape) dry-run cells with skip annotations."""
+    out = []
+    for arch in ARCHS.values():
+        for shape in SHAPES.values():
+            skip = None
+            if shape.name == "long_500k" and arch.name not in LONG_CONTEXT_OK:
+                skip = "pure full-attention arch: long_500k skipped (DESIGN.md §4)"
+            if skip is None or include_skipped:
+                out.append((arch, shape, skip))
+    return out

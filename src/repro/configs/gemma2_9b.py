@@ -1,0 +1,5 @@
+"""Arch config module (assignment deliverable f): selectable via --arch."""
+from repro.configs.archs import GEMMA2_9B as CONFIG
+from repro.configs.base import smoke_variant
+
+SMOKE = smoke_variant(CONFIG)

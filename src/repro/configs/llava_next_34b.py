@@ -1,0 +1,5 @@
+"""Arch config module (assignment deliverable f): selectable via --arch."""
+from repro.configs.archs import LLAVA_NEXT_34B as CONFIG
+from repro.configs.base import smoke_variant
+
+SMOKE = smoke_variant(CONFIG)

@@ -1,0 +1,137 @@
+"""Entity representation for the ER pipeline.
+
+Entities are fixed-width records (TPU adaptation of the paper's (String,
+String[]) Hadoop sequence files — see DESIGN.md §2):
+
+  key:   (N,)  int32   blocking key (packed, non-negative, < 2^30)
+  eid:   (N,)  int32   stable global entity id (lineage / test oracle)
+  valid: (N,)  bool    slot occupancy (fixed-capacity shards carry padding)
+  payload: dict of per-entity arrays, e.g.
+     "sig":  (N, SIG_WORDS) uint32   bit-packed trigram signature
+     "feat": (N, F)         float32  dense feature embedding
+     "text": (N, L)         uint8    padded byte string (exact matchers)
+
+All shard-level ops keep VALID ENTITIES CONTIGUOUS from slot 0 in blocking-key
+order — the sliding-window distance is then slot distance (see window.py).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+INVALID_KEY = jnp.int32(2**31 - 1)   # sorts after every real key
+
+
+def make_entities(key, eid, payload=None, valid=None) -> dict:
+    key = jnp.asarray(key, jnp.int32)
+    n = key.shape[0]
+    return {
+        "key": key,
+        "eid": jnp.asarray(eid, jnp.int32),
+        "valid": jnp.ones((n,), bool) if valid is None
+        else jnp.asarray(valid, bool),
+        "payload": dict(payload or {}),
+    }
+
+
+def n_valid(ents) -> jax.Array:
+    return jnp.sum(ents["valid"].astype(jnp.int32))
+
+
+def sort_key(ents) -> jax.Array:
+    """int32 sort key: invalid slots pushed to the end."""
+    return jnp.where(ents["valid"], ents["key"], INVALID_KEY)
+
+
+def permute(ents, order) -> dict:
+    take = lambda a: jnp.take(a, order, axis=0)
+    return {
+        "key": take(ents["key"]),
+        "eid": take(ents["eid"]),
+        "valid": take(ents["valid"]),
+        "payload": {k: take(v) for k, v in ents["payload"].items()},
+    }
+
+
+def sort_entities(ents) -> dict:
+    """Deterministic sort by (key, eid), invalid slots last."""
+    pre = jnp.argsort(ents["eid"])
+    ents = permute(ents, pre)
+    order = jnp.argsort(sort_key(ents), stable=True)
+    return permute(ents, order)
+
+
+def concat(a, b) -> dict:
+    cat = lambda x, y: jnp.concatenate([x, y], axis=0)
+    return {
+        "key": cat(a["key"], b["key"]),
+        "eid": cat(a["eid"], b["eid"]),
+        "valid": cat(a["valid"], b["valid"]),
+        "payload": {k: cat(a["payload"][k], b["payload"][k])
+                    for k in a["payload"]},
+    }
+
+
+def empty_like(ents, n: int) -> dict:
+    z = lambda a: jnp.zeros((n,) + a.shape[1:], a.dtype)
+    return {
+        "key": jnp.full((n,), INVALID_KEY, jnp.int32),
+        "eid": z(ents["eid"]),
+        "valid": jnp.zeros((n,), bool),
+        "payload": {k: z(v) for k, v in ents["payload"].items()},
+    }
+
+
+def slice_entities(ents, start, size: int) -> dict:
+    ds = lambda a: jax.lax.dynamic_slice_in_dim(a, start, size, axis=0)
+    return {
+        "key": ds(ents["key"]),
+        "eid": ds(ents["eid"]),
+        "valid": ds(ents["valid"]),
+        "payload": {k: ds(v) for k, v in ents["payload"].items()},
+    }
+
+
+def roll(ents, shift) -> dict:
+    r = lambda a: jnp.roll(a, shift, axis=0)
+    return {
+        "key": r(ents["key"]),
+        "eid": r(ents["eid"]),
+        "valid": r(ents["valid"]),
+        "payload": {k: r(v) for k, v in ents["payload"].items()},
+    }
+
+
+# -- synthetic data (benchmarks / tests) ------------------------------------------
+
+def synth_entities(rng: np.random.Generator, n: int, *,
+                   n_keys: int = 1000, sig_words: int = 8,
+                   feat_dim: int = 32, dup_frac: float = 0.2,
+                   skew: float = 0.0) -> dict:
+    """Synthetic publication-like corpus (paper §5.1 analogue: 1.4M records,
+    key = first letters of title).  ``skew`` in [0,1): fraction of entities
+    concentrated on the largest key (paper's Even8_40..85 configurations).
+    Duplicates get near-identical payloads (detectable by the matchers)."""
+    keys = rng.integers(0, n_keys, size=n).astype(np.int32)
+    if skew > 0:
+        hot = rng.random(n) < skew
+        keys[hot] = n_keys - 1
+    feat = rng.normal(size=(n, feat_dim)).astype(np.float32)
+    sig = rng.integers(0, 2**32, size=(n, sig_words), dtype=np.uint64) \
+        .astype(np.uint32)
+    # plant duplicates: copy an earlier entity's key/payload with tiny noise
+    n_dup = int(n * dup_frac)
+    if n_dup:
+        src = rng.integers(0, n, size=n_dup)
+        dst = rng.integers(0, n, size=n_dup)
+        keys[dst] = keys[src]
+        feat[dst] = feat[src] + 0.01 * rng.normal(size=(n_dup, feat_dim)) \
+            .astype(np.float32)
+        sig[dst] = sig[src]
+    feat /= np.linalg.norm(feat, axis=1, keepdims=True) + 1e-9
+    return make_entities(
+        keys, np.arange(n, dtype=np.int32),
+        payload={"feat": jnp.asarray(feat), "sig": jnp.asarray(sig)})

@@ -1,0 +1,53 @@
+"""JobSN — Sorted Neighborhood with an additional phase (paper §4.2).
+
+Phase 1 = SRP + local sliding window (reduce also emits its first/last w-1
+entities, keyed by boundary number).  Phase 2 = a second job that windows
+each boundary group and filters pairs already produced in phase 1.
+
+TPU mapping (DESIGN.md §2): the "second job" becomes a second collective
+phase — boundary group i (= last w-1 of shard i ++ first w-1 of shard i+1)
+is materialized on shard i by one *backward* collective-permute of the
+successor's head.  The window then runs with mode="cross" (only pairs that
+span the boundary — the paper's lineage-prefix filter).
+
+The paper ran phase 2 with r=1 on Hadoop because boundary groups are tiny;
+here every shard processes its own boundary in parallel.  The structural
+difference vs RepSN that the paper measures (extra job-scheduling +
+materialization vs inline replication) maps to: extra collective phase +
+extra band compute vs halo prepend — compared in benchmarks/bench_jobsn_vs_repsn.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import entities as E
+from repro.core.repsn import tail_window
+
+
+def head_window(ents: dict, w: int) -> dict:
+    """First w-1 valid entities (sorted shards keep valid first, so this is a
+    static slice; trailing slots may be invalid)."""
+    s = E.sort_entities(ents)
+    return E.slice_entities(s, 0, w - 1)
+
+
+def boundary_group(sorted_ents: dict, w: int, r: int,
+                   axis: str) -> Tuple[dict, int]:
+    """Phase 2 input for this shard: [my_tail (w-1) | successor_head (w-1)].
+
+    Shard r-1 has no successor: ppermute leaves its received head all-invalid
+    (zero-filled), so its boundary band is empty.  Returns (group, halo_len)
+    with halo_len = w-1 marking the boundary position for mode="cross"."""
+    back = [(i, (i - 1) % r) for i in range(r)]
+    head = head_window(sorted_ents, w)
+    recv = jax.tree.map(lambda x: jax.lax.ppermute(x, axis, back), head)
+    # full-ring permute (vmap requires completeness): drop the wrapped edge —
+    # shard r-1 has no successor, so its received head is invalid.
+    last = jax.lax.axis_index(axis) == r - 1
+    recv["valid"] = recv["valid"] & ~last
+    recv["key"] = jnp.where(recv["valid"], recv["key"], E.INVALID_KEY)
+    tail = tail_window(sorted_ents, w)
+    return E.concat(tail, recv), w - 1

@@ -1,0 +1,42 @@
+"""Blocking-key generation (the paper's map-side key function).
+
+The paper uses "the lowercased first two letters of the title"; generally the
+concatenated prefixes of a few attributes.  Here keys are generated fully
+vectorized from padded byte strings: each of the first ``k`` characters is
+folded to a 6-bit code (lowercased a-z -> 1..26, digits -> 27..36, other -> 0)
+and packed big-endian into an int32 (k <= 5 keeps keys < 2^30, so the key
+space is totally ordered exactly like the string prefix order the paper
+sorts by).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def char_code(c: jax.Array) -> jax.Array:
+    """uint8 char -> 6-bit code, case-folded."""
+    c = c.astype(jnp.int32)
+    lower = jnp.where((c >= 65) & (c <= 90), c + 32, c)    # fold A-Z -> a-z
+    az = (lower >= 97) & (lower <= 122)
+    dg = (lower >= 48) & (lower <= 57)
+    return jnp.where(az, lower - 96, jnp.where(dg, lower - 48 + 27, 0))
+
+
+def prefix_key(text: jax.Array, k: int = 2) -> jax.Array:
+    """text: (N, L) uint8 padded strings -> (N,) int32 blocking keys."""
+    assert k <= 5, "k>5 overflows int32 key space"
+    codes = char_code(text[:, :k])                          # (N, k)
+    weights = (64 ** np.arange(k - 1, -1, -1)).astype(np.int32)
+    return (codes * weights[None, :]).sum(axis=1).astype(jnp.int32)
+
+
+def multipass_keys(text: jax.Array, passes: int = 2, k: int = 2):
+    """Multi-pass SN (paper §4): different key functions per pass.  Pass p
+    uses the prefix starting at offset p (a standard multi-pass choice)."""
+    return [prefix_key(text[:, p:], k=k) for p in range(passes)]
+
+
+def key_range(k: int = 2) -> int:
+    return 64 ** k

@@ -1,0 +1,126 @@
+"""Partition functions p: key -> reducer index (paper §4.1) + skew tooling.
+
+A partitioner is a monotonically non-decreasing map from blocking keys to
+shard ids, represented by r-1 int32 upper boundaries: shard i receives keys in
+(bounds[i-1], bounds[i]].  Monotonicity gives sorted reduce partitions (SRP).
+
+* ``range_partition``      — paper-faithful static range split (Even8/Even10)
+* ``manual_partition``     — explicit boundaries (paper's hand-tuned 'Manual')
+* ``sample_partition``     — BEYOND-PAPER: equi-depth boundaries from a key
+                             sample (the load-balancing future work of §7)
+* ``gini``                 — the paper's skew metric (§5.3)
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def shard_of(bounds: jax.Array, keys: jax.Array) -> jax.Array:
+    """bounds: (r-1,) sorted upper bounds -> shard id in [0, r)."""
+    return jnp.searchsorted(bounds, keys, side="left").astype(jnp.int32)
+
+
+def range_partition(key_space: int, r: int) -> jax.Array:
+    """Evenly split the KEY SPACE into r intervals (paper's Even8/Even10)."""
+    edges = (np.arange(1, r) * key_space) // r
+    return jnp.asarray(edges, jnp.int32)
+
+
+def manual_partition(edges: Sequence[int]) -> jax.Array:
+    return jnp.asarray(sorted(edges), jnp.int32)
+
+
+def sample_partition(sample_keys: jax.Array, r: int) -> jax.Array:
+    """Equi-depth boundaries from sampled keys (beyond-paper skew handling,
+    the classic sample-sort splitter selection).  Works on-device."""
+    s = jnp.sort(sample_keys)
+    n = s.shape[0]
+    idx = (jnp.arange(1, r) * n) // r
+    return s[idx].astype(jnp.int32)
+
+
+def balanced_partition(keys: np.ndarray, r: int) -> jax.Array:
+    """Histogram-based equi-depth boundaries that respect duplicate keys
+    (host-side; the auto-derived analogue of the paper's hand-tuned 'Manual'
+    partitioning).
+
+    The naive quantile splitter degenerates when one key dominates (all
+    boundaries collapse onto the hot key and shard 0 receives everything).
+    Two passes: keys with mass >= total/r are isolated into their own shards;
+    the remaining light mass is split equi-depth.  A single key's mass can
+    never be split across shards (MapReduce-inherent, paper §5.3) — the hot
+    shards are the irreducible residual skew.
+
+    Boundaries are INCLUSIVE upper bounds under ``shard_of`` (searchsorted
+    side='left')."""
+    ks = np.asarray(keys)
+    uniq, counts = np.unique(ks, return_counts=True)
+    total = int(counts.sum())
+    hot = counts >= total / r
+    n_hot = int(hot.sum())
+    light_total = total - int(counts[hot].sum())
+    light_shards = max(r - n_hot, 1)
+    light_target = max(light_total / light_shards, 1.0)
+
+    edges: list[int] = []
+    acc = 0
+    for u, c in zip(uniq, counts):
+        if len(edges) >= r - 1:
+            break
+        u = int(u)
+        if c >= total / r:                  # hot key: own shard
+            if acc > 0:
+                edges.append(u - 1)         # close the light shard before it
+                acc = 0
+            if len(edges) < r - 1:
+                edges.append(u)             # close the hot key's shard
+            continue
+        acc += int(c)
+        if acc >= light_target:
+            edges.append(u)
+            acc = 0
+    # pad with strictly-increasing unused bounds
+    hi = int(uniq[-1]) if len(uniq) else 0
+    while len(edges) < r - 1:
+        hi += 1
+        edges.append(hi)
+    edges = sorted(set(edges))
+    while len(edges) < r - 1:               # dedup may shrink; repad
+        edges.append(edges[-1] + 1)
+    return jnp.asarray(edges[:r - 1], jnp.int32)
+
+
+def partition_sizes(bounds: jax.Array, keys: jax.Array,
+                    valid=None, r: int = None) -> jax.Array:
+    r = r if r is not None else int(bounds.shape[0]) + 1
+    sid = shard_of(bounds, keys)
+    w = jnp.ones_like(sid, jnp.int32) if valid is None \
+        else valid.astype(jnp.int32)
+    return jnp.zeros((r,), jnp.int32).at[sid].add(w)
+
+
+def gini(sizes) -> float:
+    """Gini coefficient of partition sizes (paper §5.3):
+    g = 2*sum(i*y_i)/(n*sum(y_i)) - (n+1)/n with y sorted ascending."""
+    y = np.sort(np.asarray(sizes).astype(np.float64))
+    n = len(y)
+    tot = y.sum()
+    if tot == 0 or n == 0:
+        return 0.0
+    i = np.arange(1, n + 1)
+    return float(2.0 * (i * y).sum() / (n * tot) - (n + 1) / n)
+
+
+def skewed_partition(key_space: int, r: int, hot_frac: float,
+                     keys: np.ndarray) -> jax.Array:
+    """Paper's Even8_40..Even8_85: boundaries chosen so that ``hot_frac`` of
+    the entities land in the LAST partition, the rest evenly split."""
+    ks = np.sort(np.asarray(keys))
+    n = len(ks)
+    cut = ks[min(int(n * (1.0 - hot_frac)), n - 1)]
+    inner = np.linspace(0, cut, r, dtype=np.int64)[1:]      # r-1 edges <= cut
+    return jnp.asarray(inner, jnp.int32)

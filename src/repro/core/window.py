@@ -1,0 +1,107 @@
+"""Sliding-window matching over a sorted shard (the paper's reduce step).
+
+The window is evaluated as a BAND: for a sorted array of M slots,
+``band[d-1, i] = score(E[i], E[i+d])`` for distance d in 1..w-1.  Validity
+masking + the slot conventions (valid entities contiguous in key order, halo
+entities occupying the first ``halo_len`` slots) make slot distance equal
+rank distance, so the band is exactly the paper's sliding window.
+
+Three evaluation paths:
+  * ``band_scores``         pure-JAX scan over distances (memory-safe oracle)
+  * kernels.banded_ops      Pallas MXU band kernels (hot path; see kernels/)
+  * ``band_matches_cascade``the paper's §5.1 two-stage skip optimization:
+                            cheap band -> compact candidates -> exact matcher
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import entities as E
+from repro.core.match import CascadeMatcher
+
+
+def _pair_mask(valid: jax.Array, d: jax.Array, *, halo_len: int,
+               mode: str) -> jax.Array:
+    """Mask for pairs (i, i+d) of a combined [halo | native] array.
+
+    mode:
+      "all"      every valid pair (plain SRP shard)
+      "native"   at least the LATER element is native (RepSN rule: halo-halo
+                 pairs were already emitted by the predecessor shard)
+      "cross"    earlier element in the first half, later in the second half
+                 (JobSN boundary job: only cross-partition pairs; same-side
+                 pairs were emitted in phase 1)
+    """
+    m = valid.shape[0]
+    i = jnp.arange(m, dtype=jnp.int32)
+    j = i + d
+    ok = (j < m) & valid & jnp.roll(valid, -d)
+    if mode == "native":
+        ok &= j >= halo_len
+    elif mode == "cross":
+        ok &= (i < halo_len) & (j >= halo_len)
+    return ok
+
+
+def band_scores(ents: dict, w: int, matcher: CascadeMatcher, *,
+                halo_len: int = 0, mode: str = "all",
+                skip: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """Returns (scores, mask), each (w-1, M): row d-1 holds distance-d pairs.
+
+    Scans over distances; each step scores M pairs via a rolled payload view —
+    O(M * F) live memory regardless of w."""
+    payload = ents["payload"]
+    valid = ents["valid"]
+
+    def step(_, d):
+        rolled = {k: jnp.roll(v, -d, axis=0) for k, v in payload.items()}
+        score, _ = matcher.combined(payload, rolled, skip=skip)
+        ok = _pair_mask(valid, d, halo_len=halo_len, mode=mode)
+        return None, (jnp.where(ok, score, 0.0), ok)
+
+    _, (scores, mask) = jax.lax.scan(
+        step, None, jnp.arange(1, w, dtype=jnp.int32))
+    return scores, mask
+
+
+def band_matches(ents: dict, w: int, matcher: CascadeMatcher, *,
+                 halo_len: int = 0, mode: str = "all") -> jax.Array:
+    scores, mask = band_scores(ents, w, matcher, halo_len=halo_len, mode=mode)
+    return (scores >= matcher.threshold) & mask
+
+
+def compact_candidates(scores: jax.Array, mask: jax.Array, tau: float,
+                       cap: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Stage-2 of the cascade: compact (d, i) band positions whose cheap
+    score >= tau into a fixed-capacity candidate list.
+
+    Returns (cand_i, cand_d, cand_valid) each (cap,)."""
+    flat = (scores >= tau) & mask                      # (w-1, M)
+    wm1, m = flat.shape
+    flat1 = flat.reshape(-1)
+    # stable order: candidates first
+    order = jnp.argsort(~flat1, stable=True)[:cap]
+    val = flat1[order]
+    d = order // m + 1
+    i = order % m
+    return i.astype(jnp.int32), d.astype(jnp.int32), val
+
+
+def score_candidates(ents: dict, cand_i, cand_d, cand_valid,
+                     matcher: CascadeMatcher) -> jax.Array:
+    """Run the full (expensive) matcher on compacted candidate pairs only —
+    the real-FLOP realization of the paper's skip optimization."""
+    j = cand_i + cand_d
+    j = jnp.minimum(j, ents["valid"].shape[0] - 1)
+    pa = {k: v[cand_i] for k, v in ents["payload"].items()}
+    pb = {k: v[j] for k, v in ents["payload"].items()}
+    score, _ = matcher.combined(pa, pb, skip=False)
+    return jnp.where(cand_valid, score, 0.0)
+
+
+def band_pair_count(mask: jax.Array) -> jax.Array:
+    return jnp.sum(mask.astype(jnp.int32))

@@ -1,0 +1,129 @@
+"""Data pipeline: deterministic synthetic corpus + SN-dedup integration.
+
+The paper's technique is a *data-pipeline stage*: corpus deduplication before
+LM training.  ``DedupPipeline`` runs documents through the distributed SN
+blocking + matching workflow and yields a keep-mask; ``TokenBatcher`` then
+serves deterministic, step-indexed token batches (resumable: batch(step) is a
+pure function of (seed, step), so crash recovery replays exactly — see
+train/loop.py fault handling).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterator, Optional, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import entities as E
+from repro.core import keys as K
+from repro.core import partition as P
+from repro.core import pipeline as PL
+from repro.core.pipeline import SNConfig
+
+
+# -- synthetic document corpus -----------------------------------------------------
+
+def synth_corpus(seed: int, n_docs: int, *, doc_len: int = 64,
+                 vocab: int = 1000, dup_frac: float = 0.25,
+                 near_dup_noise: int = 2) -> np.ndarray:
+    """Token documents (n_docs, doc_len) with planted near-duplicates."""
+    rng = np.random.default_rng(seed)
+    docs = rng.integers(1, vocab, size=(n_docs, doc_len), dtype=np.int32)
+    n_dup = int(n_docs * dup_frac)
+    src = rng.integers(0, n_docs, size=n_dup)
+    dst = rng.integers(0, n_docs, size=n_dup)
+    docs[dst] = docs[src]
+    # near-duplicates: perturb a few tokens
+    for d in dst[: n_dup // 2]:
+        pos = rng.integers(0, doc_len, size=near_dup_noise)
+        docs[d, pos] = rng.integers(1, vocab, size=near_dup_noise)
+    return docs
+
+
+def doc_entities(docs: np.ndarray, *, sig_words: int = 8,
+                 feat_dim: int = 64) -> dict:
+    """Documents -> entity records: blocking key from the leading tokens,
+    minhash-style bit signature + mean-pooled hashed features as payload."""
+    n, L = docs.shape
+    # blocking key: first two tokens folded into <2^30 (the 'title prefix')
+    key = (docs[:, 0].astype(np.int64) * 1009 + docs[:, 1]) % (1 << 24)
+    rng = np.random.default_rng(0)
+    proj = rng.normal(size=(1024, feat_dim)).astype(np.float32) / 8.0
+    feat = proj[docs.astype(np.int64) % 1024].mean(axis=1)
+    feat /= np.linalg.norm(feat, axis=1, keepdims=True) + 1e-9
+    # token-set bit signature
+    bits = (docs.astype(np.int64) * 2654435761 % (sig_words * 32)).astype(
+        np.int64)
+    sig = np.zeros((n, sig_words), np.uint32)
+    rows = np.repeat(np.arange(n), L)
+    w = bits.reshape(-1) // 32
+    b = bits.reshape(-1) % 32
+    np.bitwise_or.at(sig, (rows, w), (1 << b.astype(np.uint32)))
+    return E.make_entities(
+        key.astype(np.int32), np.arange(n, dtype=np.int32),
+        payload={"feat": jnp.asarray(feat), "sig": jnp.asarray(sig)})
+
+
+@dataclass
+class DedupResult:
+    keep: np.ndarray                 # (n_docs,) bool
+    n_pairs: int
+    n_dropped: int
+    gini: float
+    overflow: int
+
+
+def dedup_corpus(docs: np.ndarray, *, r: int = 4, window: int = 10,
+                 variant: str = "repsn", threshold: float = 0.9,
+                 balance: bool = True) -> DedupResult:
+    """The paper's workflow as a corpus-dedup stage.  Keeps the lowest-eid
+    member of every matched pair (union-find-free greedy: drop the higher)."""
+    ents = doc_entities(docs)
+    keys_np = np.asarray(ents["key"])
+    bounds = P.balanced_partition(keys_np, r) if balance else \
+        P.range_partition(1 << 24, r)
+    from dataclasses import replace
+    from repro.core.match import default_matcher
+    matcher = replace(default_matcher(), threshold=threshold)
+    cfg = SNConfig(window=window, variant=variant, matcher=matcher)
+    out = PL.run_vmap(ents, r, bounds, cfg)
+    pairs = PL.result_pairs(out)
+    keep = np.ones(docs.shape[0], bool)
+    for a, b in sorted(pairs):
+        if keep[a]:
+            keep[b] = False
+    sizes = np.asarray(P.partition_sizes(bounds, ents["key"], r=r))
+    return DedupResult(keep=keep, n_pairs=len(pairs),
+                       n_dropped=int((~keep).sum()),
+                       gini=P.gini(sizes), overflow=int(out["overflow"][0]))
+
+
+# -- deterministic token batcher ----------------------------------------------------
+
+@dataclass
+class TokenBatcher:
+    """batch(step) is a pure function of (seed, step): crash recovery replays
+    the exact data order (fault tolerance requires deterministic data)."""
+    docs: np.ndarray                  # (n_docs, L) post-dedup
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+
+    def __post_init__(self):
+        flat = self.docs.reshape(-1)
+        n_tok = (flat.shape[0] // self.seq_len) * self.seq_len
+        self.stream = flat[:n_tok].reshape(-1, self.seq_len)
+
+    @property
+    def n_sequences(self) -> int:
+        return self.stream.shape[0]
+
+    def batch(self, step: int) -> Dict[str, np.ndarray]:
+        rng = np.random.default_rng((self.seed << 20) ^ step)
+        idx = rng.integers(0, self.n_sequences, size=self.global_batch)
+        toks = self.stream[idx].astype(np.int32)
+        labels = np.concatenate(
+            [toks[:, 1:], np.full((toks.shape[0], 1), -1, np.int32)], axis=1)
+        return {"tokens": toks, "labels": labels}

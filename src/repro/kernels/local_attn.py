@@ -1,0 +1,113 @@
+"""Pallas TPU kernel: sliding-window (local) flash attention.
+
+Causal attention restricted to a window w — the LM-side twin of the SN band
+(gemma2 local layers, mixtral SWA, recurrentgemma local attention).
+
+Grid (B*KH, n_q, n_kv): for query block iq, the innermost grid dim walks the
+``nkv = window/Bk + 1`` kv blocks that can intersect [iq*Bq - w, iq*Bq + Bq).
+Flash accumulators (m, l, acc) live in VMEM scratch and persist across the
+innermost (sequential on TPU) grid dimension; the output block is written on
+the last kv iteration.  Out-of-range kv block indices are clamped by the
+BlockSpec index_map and fully masked inside the kernel via the true block id.
+
+VMEM at Bq=Bk=256, D=128 heads: q/k/v blocks 3*64KB + acc 128KB + scores
+(256,256) f32 256KB -> well under budget; all dims 128-aligned for the MXU.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _local_attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                       block_q: int, block_k: int, window: int, nkv: int,
+                       scale: float, softcap: float, q_per_kv: int):
+    iq = pl.program_id(1)
+    ikv = pl.program_id(2)
+
+    @pl.when(ikv == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    true_j = iq - (nkv - 1) + ikv                 # true kv block index
+    valid_block = true_j >= 0
+
+    @pl.when(valid_block)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)          # (Bq, D)
+        k = k_ref[0].astype(jnp.float32)          # (Bk, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        qp = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kp = true_j * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = (kp <= qp) & (kp > qp - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                       # (Bq, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ikv == nkv - 1)
+    def _flush():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def local_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    window: int, block_q: int = 256, block_k: int = 256,
+                    softcap: float = 0.0,
+                    interpret: bool = False) -> jax.Array:
+    """q: (BH, S, D); k, v: (BH, S, D) — heads pre-flattened into the batch
+    dim (GQA: repeat kv outside or pass q_per_kv-grouped views).  Causal with
+    sliding window ``window``.  Returns (BH, S, D)."""
+    bh, s, d = q.shape
+    assert s % block_q == 0 and s % block_k == 0
+    assert block_q == block_k, "block walk assumes equal q/kv blocks"
+    nq = s // block_q
+    # kv blocks intersecting [iq*Bq - window, iq*Bq + Bq): ceil((w-1)/Bk) back
+    # plus the diagonal block (a partially-masked extra block is harmless).
+    nkv = (max(window, 1) + block_k - 1) // block_k + 1
+    scale = 1.0 / math.sqrt(d)
+    from jax.experimental.pallas import tpu as pltpu
+
+    kernel = functools.partial(
+        _local_attn_kernel, block_q=block_q, block_k=block_k, window=window,
+        nkv=nkv, scale=scale, softcap=softcap, q_per_kv=1)
+
+    def kv_map(b, i, j):
+        return (b, jnp.maximum(i - (nkv - 1) + j, 0), 0)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), kv_map),
+            pl.BlockSpec((1, block_k, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),     # m
+            pltpu.VMEM((block_q, 1), jnp.float32),     # l
+            pltpu.VMEM((block_q, d), jnp.float32),     # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,79 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (the kernels VALIDATE on CPU via the
+Pallas interpreter and compile natively on TPU — same code path).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.banded_sim import banded_sim_tiles
+from repro.kernels.jaccard_band import jaccard_band_tiles
+from repro.kernels.local_attn import local_attention
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def band_from_tiles(tiles: jax.Array, *, window: int,
+                    block_i: int) -> jax.Array:
+    """(M, 2*Bi) tiles -> (M, window) band.
+
+    band[g, d] = tiles[g, (g % Bi) + 1 + d]; entries with global j >= M are
+    zeroed."""
+    m = tiles.shape[0]
+    r = jnp.arange(m, dtype=jnp.int32)
+    local = r % block_i
+    cols = local[:, None] + 1 + jnp.arange(window, dtype=jnp.int32)[None, :]
+    band = jnp.take_along_axis(tiles, cols, axis=1)
+    ok = (r[:, None] + 1 + jnp.arange(window)[None, :]) < m
+    return jnp.where(ok, band, 0.0)
+
+
+@partial(jax.jit, static_argnames=("window", "block_i", "interpret"))
+def banded_dot_band(feat: jax.Array, *, window: int, block_i: int = 256,
+                    interpret: bool = None) -> jax.Array:
+    """Banded <feat_i, feat_j> similarity: (M, F) -> (M, window)."""
+    interpret = default_interpret() if interpret is None else interpret
+    m, f = feat.shape
+    bi = min(block_i, m)
+    pad = (-m) % bi
+    if pad:
+        feat = jnp.pad(feat, ((0, pad), (0, 0)))
+    tiles = banded_sim_tiles(feat, window=window, block_i=bi,
+                             interpret=interpret)
+    return band_from_tiles(tiles, window=window, block_i=bi)[:m]
+
+
+@partial(jax.jit, static_argnames=("window", "block_i", "interpret"))
+def jaccard_band(sig: jax.Array, *, window: int, block_i: int = 256,
+                 interpret: bool = None) -> jax.Array:
+    """Banded Jaccard over bit signatures: (M, W32) -> (M, window)."""
+    interpret = default_interpret() if interpret is None else interpret
+    m, words = sig.shape
+    bi = min(block_i, m)
+    pad = (-m) % bi
+    if pad:
+        sig = jnp.pad(sig, ((0, pad), (0, 0)))
+    tiles = jaccard_band_tiles(sig, window=window, block_i=bi,
+                               interpret=interpret)
+    return band_from_tiles(tiles, window=window, block_i=bi)[:m]
+
+
+@partial(jax.jit,
+         static_argnames=("window", "block_q", "block_k", "softcap",
+                          "interpret"))
+def local_attn(q: jax.Array, k: jax.Array, v: jax.Array, *, window: int,
+               block_q: int = 256, block_k: int = 256, softcap: float = 0.0,
+               interpret: bool = None) -> jax.Array:
+    """Sliding-window flash attention: (BH, S, D) x3 -> (BH, S, D)."""
+    interpret = default_interpret() if interpret is None else interpret
+    s = q.shape[1]
+    bq = bk = min(block_q, block_k, s)
+    return local_attention(q, k, v, window=window, block_q=bq, block_k=bk,
+                           softcap=softcap, interpret=interpret)

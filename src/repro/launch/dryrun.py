@@ -1,0 +1,260 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + \
+    " --xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture x input-shape x mesh) cell:
+  jit(step).lower(*ShapeDtypeStructs).compile()
+on the 16x16 single-pod mesh and the 2x16x16 multi-pod mesh, recording
+memory_analysis / cost_analysis / per-collective byte counts into a JSON
+artifact consumed by benchmarks/roofline.py and EXPERIMENTS.md.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from functools import partial
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES, cells, get_config
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.perf import hlo_analysis
+from repro.sharding.rules import Rules
+from repro.train import steps as S
+
+ART_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """bytes of an HLO type string like 'bf16[128,4096]' or a tuple thereof."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-buffer bytes per collective kind from post-SPMD HLO.
+
+    all-reduce is counted 2x (ring moves ~2x the payload); -start/-done async
+    pairs are counted once (on the -start)."""
+    out = {k: {"bytes": 0, "count": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        eq = s.find(" = ")
+        if eq < 0:
+            continue
+        rhs = s[eq + 3:]
+        for kind in _COLLECTIVES:
+            # match op name at the call site, skip -done halves of async pairs
+            if re.search(rf"\b{kind}(-start)?\(", rhs):
+                b = _shape_bytes(rhs[:rhs.find(kind)])
+                factor = 2 if kind == "all-reduce" else 1
+                out[kind]["bytes"] += b * factor
+                out[kind]["count"] += 1
+                break
+    out["total_bytes"] = sum(
+        v["bytes"] for k, v in out.items() if isinstance(v, dict))
+    return out
+
+
+#: memory-safe defaults for the full-size train cells (see EXPERIMENTS.md
+#: §Dry-run: per-device HBM on v5e is 16 GB; full remat + microbatching keeps
+#: every assigned arch under budget).  NOTE the CPU-backend proxy measures
+#: ~2x the remat stack because XLA:CPU promotes the saved bf16 stack through
+#: a materialized f32 copy (native-bf16 TPUs don't) — see EXPERIMENTS.md
+#: §Dry-run methodology.  Hillclimb overrides come in via ``run_overrides``.
+TRAIN_DEFAULTS = {"remat": "full", "microbatch": 4}
+
+#: per-arch microbatch bumps for the largest models (keeps the remat stack +
+#: optimizer temps inside HBM; chosen from the mb sweep in EXPERIMENTS.md).
+ARCH_TRAIN_OVERRIDES = {
+    "qwen1.5-110b": {"microbatch": 8},
+    "qwen3-moe-235b-a22b": {"microbatch": 16},
+    "mixtral-8x22b": {"microbatch": 8},
+    "recurrentgemma-9b": {"microbatch": 8},
+}
+
+
+def build_cell(arch: str, shape: str, mesh, *, run_overrides=None):
+    """Returns (fn, args_sds, in_shardings, out_shardings=None)."""
+    cfg = get_config(arch)
+    shp = SHAPES[shape]
+    overrides = dict(TRAIN_DEFAULTS) if shp.kind == "train" else {}
+    if shp.kind == "train":
+        overrides.update(ARCH_TRAIN_OVERRIDES.get(arch, {}))
+    overrides.update(run_overrides or {})
+    run = RunConfig(model=cfg, shape=shp, **overrides)
+    ctx_parallel = shp.name == "long_500k"
+    if shp.kind == "train":
+        fsdp = run.fsdp
+    else:
+        # serving: model-axis TP alone leaves >8 GB of params per chip for
+        # the biggest archs — shard over data too (per-layer gather).
+        fsdp = cfg.param_count() * 2 / 16 > 8e9
+    rules = Rules(mesh, fsdp=fsdp,
+                  seq_shard_kv=run.seq_shard_kv and shp.kind != "train",
+                  context_parallel=ctx_parallel,
+                  seq_parallel=run.seq_parallel and shp.kind != "decode")
+
+    if shp.kind == "train":
+        fn = S.make_train_step(cfg, run, rules)
+        state_sds = jax.eval_shape(
+            partial(S.train_state_init, cfg=cfg, dtype=jnp.bfloat16),
+            jax.random.PRNGKey(0))
+        batch_sds = S.train_batch_shapes(cfg, run)
+        state_sh = S.resolve_shardings(rules, S.train_state_specs(cfg),
+                                       state_sds)
+        batch_sh = S.resolve_shardings(rules, S.train_batch_spec(cfg, run),
+                                       batch_sds)
+        return fn, (state_sds, batch_sds), (state_sh, batch_sh)
+
+    params_sds = jax.eval_shape(
+        partial(lm.lm_init, cfg=cfg, dtype=jnp.bfloat16),
+        jax.random.PRNGKey(0))
+    params_sh = S.resolve_shardings(rules, lm.lm_specs(cfg), params_sds)
+    cache_sds = S.cache_shapes(cfg, run)
+    cache_sh = S.resolve_shardings(rules, lm.cache_specs(cfg), cache_sds)
+
+    if shp.kind == "prefill":
+        fn = S.make_prefill_step(cfg, run, rules)
+        batch_sds = S.serve_batch_shapes(cfg, run, decode=False)
+        batch_sh = S.resolve_shardings(
+            rules, S.serve_batch_spec(cfg, decode=False), batch_sds)
+        return fn, (params_sds, batch_sds, cache_sds), \
+            (params_sh, batch_sh, cache_sh)
+
+    # decode
+    fn = S.make_decode_step(cfg, run, rules)
+    tok_sds = jax.ShapeDtypeStruct((shp.global_batch, 1), jnp.int32)
+    tok_sh = rules.sharding(("batch", None), tok_sds.shape)
+    pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+    return fn, (params_sds, tok_sds, cache_sds, pos_sds), \
+        (params_sh, tok_sh, cache_sh, None)
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, *, save: bool = True,
+             run_overrides=None, tag: str = "") -> dict:
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+           "devices": mesh.size, "status": "ok", "tag": tag}
+    try:
+        fn, args_sds, in_sh = build_cell(arch, shape, mesh,
+                                         run_overrides=run_overrides)
+        with mesh:
+            jf = jax.jit(fn, in_shardings=in_sh, donate_argnums=(0,))
+            lowered = jf.lower(*args_sds)
+            t_lower = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time()
+            ca = compiled.cost_analysis() or {}
+            ma = compiled.memory_analysis()
+            hlo = compiled.as_text()
+        rec["cost_analysis"] = {
+            k: float(v) for k, v in ca.items()
+            if isinstance(v, (int, float)) and (
+                "flops" in k or "bytes" in k or "utilization" in k.lower())}
+        rec["flops"] = float(ca.get("flops", 0.0))
+        rec["bytes_accessed"] = float(ca.get("bytes accessed", 0.0))
+        if ma is not None:
+            rec["memory_analysis"] = {
+                a: int(getattr(ma, a))
+                for a in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "generated_code_size_in_bytes")
+                if hasattr(ma, a)}
+        rec["collectives"] = collective_bytes(hlo)   # raw (body-once) counts
+        # structural analysis: while trip-count-corrected flops/bytes
+        rec["analysis"] = hlo_analysis.analyze(hlo)
+        rec["hlo_ops"] = {
+            op: hlo.count(f" {op}(") + hlo.count(f" {op}-start(")
+            for op in ("fusion", "while", "dot", "convolution")}
+        rec["lower_s"] = round(t_lower - t0, 2)
+        rec["compile_s"] = round(t_compile - t_lower, 2)
+        cfg = get_config(arch)
+        rec["model_params"] = cfg.param_count()
+        rec["active_params"] = cfg.active_param_count()
+    except Exception as e:  # noqa: BLE001 — record and continue the sweep
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["total_s"] = round(time.time() - t0, 2)
+    if save:
+        ART_DIR.mkdir(parents=True, exist_ok=True)
+        suffix = f"_{tag}" if tag else ""
+        path = ART_DIR / f"{arch}_{shape}_{mesh_kind}{suffix}.json"
+        path.write_text(json.dumps(rec, indent=1))
+        rec["artifact"] = str(path)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        todo = [(a.name, s.name) for a, s, skip in cells() if skip is None]
+    else:
+        assert args.arch and args.shape
+        todo = [(args.arch, args.shape)]
+
+    for arch, shape in todo:
+        for mk in meshes:
+            suffix = f"_{args.tag}" if args.tag else ""
+            path = ART_DIR / f"{arch}_{shape}_{mk}{suffix}.json"
+            if args.skip_existing and path.exists() and \
+                    json.loads(path.read_text()).get("status") == "ok":
+                print(f"[skip] {arch} x {shape} x {mk}")
+                continue
+            rec = run_cell(arch, shape, mk, tag=args.tag)
+            if rec["status"] == "ok":
+                an = rec["analysis"]
+                print(f"[ok]   {arch} x {shape} x {mk}: "
+                      f"dot_flops={an['dot_flops']:.3e}/dev "
+                      f"coll={an['collective_bytes']:.3e}B/dev "
+                      f"compile={rec['compile_s']}s", flush=True)
+                ma = rec.get("memory_analysis")
+                if ma:
+                    print("       memory_analysis:", ma, flush=True)
+            else:
+                print(f"[FAIL] {arch} x {shape} x {mk}: {rec['error']}")
+
+
+if __name__ == "__main__":
+    main()

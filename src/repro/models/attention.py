@@ -1,0 +1,347 @@
+"""Attention: RoPE, chunk-pair flash attention, decode attention.
+
+The training/prefill path uses *chunk-pair flash attention*: the (q-chunk,
+kv-chunk) pairs that can contain unmasked entries are enumerated **statically**
+(causal triangle, or sliding-window band), and a single ``lax.scan`` runs over
+that pair list with running-softmax accumulators.  This does only the useful
+chunk work (no 2x masked-half waste) and is the pure-JAX analogue of a flash
+kernel; the Pallas local-attention kernel in ``repro.kernels`` covers the
+window case for the hot path.
+
+The decode path attends one query against a (possibly sequence-sharded) KV
+cache; softmax reductions over the sharded axis lower to all-reduces under
+GSPMD (distributed flash-decode).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.modules import (dense_apply, dense_init, dense_specs,
+                                  softcap as _softcap)
+
+NEG_INF = -0.7 * float(np.finfo(np.float32).max)
+
+
+# -- RoPE ---------------------------------------------------------------------
+
+def rope_apply(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D) with positions (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angle = positions[..., None].astype(jnp.float32) * freq     # (..., S, half)
+    cos = jnp.cos(angle)[..., None, :]                           # (..., S, 1, half)
+    sin = jnp.sin(angle)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- static chunk-pair enumeration ---------------------------------------------
+
+def chunk_pairs(s_q: int, s_kv: int, cq: int, ckv: int, *, causal: bool,
+                window: int, q_offset: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    """Static list of (q_chunk, kv_chunk) pairs that contain unmasked work.
+
+    q position p_q = q_offset + i_global; kv position p_k = j_global.
+    Mask admits p_k <= p_q (causal) and p_k > p_q - window (if window>0).
+    """
+    n_q = math.ceil(s_q / cq)
+    n_kv = math.ceil(s_kv / ckv)
+    pi, pj = [], []
+    for i in range(n_q):
+        q_lo = q_offset + i * cq
+        q_hi = q_offset + min((i + 1) * cq, s_q) - 1
+        for j in range(n_kv):
+            k_lo = j * ckv
+            k_hi = min((j + 1) * ckv, s_kv) - 1
+            if causal and k_lo > q_hi:
+                continue
+            if window and k_hi <= q_lo - window:
+                continue
+            pi.append(i)
+            pj.append(j)
+    return np.asarray(pi, np.int32), np.asarray(pj, np.int32)
+
+
+# -- flash attention (train / prefill) -----------------------------------------
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    logit_softcap: float = 0.0,
+                    chunk_q: int = 512, chunk_kv: int = 1024,
+                    q_offset: int = 0, rules=None) -> jax.Array:
+    """q: (B, S, H, D); k, v: (B, T, KH, D).  Returns (B, S, H, D).
+
+    ``rules``: when given, the chunked operands and accumulators are pinned
+    to kv-head sharding over the model axis.  Without this, archs whose head
+    count doesn't divide the axis (phi4: 24H/16) make GSPMD re-shard the f32
+    probability block on EVERY chunk pair (386 GB/step of all-reduce observed
+    on phi4 train) — pinning keeps the whole pair scan shard-local.
+
+    Callers must only pass ``rules`` when n_heads % model_axis != 0: for
+    evenly-dividing head counts GSPMD's flat-qkv layout is already optimal
+    and forcing kv-head sharding REGRESSES (gemma2 +5.3x collective bytes
+    measured) — see EXPERIMENTS.md §Perf iteration 5."""
+    b, s, h, d = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    cq = min(chunk_q, s)
+    ckv = min(chunk_kv, t)
+    scale = 1.0 / math.sqrt(d)
+
+    if s % cq or t % ckv:
+        # pad to chunk multiples (masked out below via positions)
+        s_pad = math.ceil(s / cq) * cq
+        t_pad = math.ceil(t / ckv) * ckv
+        q = jnp.pad(q, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, t_pad - t), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, t_pad - t), (0, 0), (0, 0)))
+    s_pad, t_pad = q.shape[1], k.shape[1]
+    n_q, n_kv = s_pad // cq, t_pad // ckv
+
+    pi, pj = chunk_pairs(s, t, cq, ckv, causal=causal, window=window,
+                         q_offset=q_offset)
+
+    # (n_q, B, KH, G, cq, D) chunked operands
+    qc = q.reshape(b, n_q, cq, kh, g, d).transpose(1, 0, 3, 4, 2, 5)
+    kc = k.reshape(b, n_kv, ckv, kh, d).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(b, n_kv, ckv, kh, d).transpose(1, 0, 3, 2, 4)
+    if rules is not None:
+        qc = rules.constrain(qc, (None, "batch", "heads", None, None, None))
+        kc = rules.constrain(kc, (None, "batch", "heads", None, None))
+        vc = rules.constrain(vc, (None, "batch", "heads", None, None))
+
+    q_pos = q_offset + jnp.arange(s_pad, dtype=jnp.int32).reshape(n_q, cq)
+    k_pos = jnp.arange(t_pad, dtype=jnp.int32).reshape(n_kv, ckv)
+
+    o0 = jnp.zeros((n_q, b, kh, g, cq, d), jnp.float32)
+    m0 = jnp.full((n_q, b, kh, g, cq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((n_q, b, kh, g, cq), jnp.float32)
+    if rules is not None:
+        o0 = rules.constrain(o0, (None, "batch", "heads", None, None, None))
+        m0 = rules.constrain(m0, (None, "batch", "heads", None, None))
+        l0 = rules.constrain(l0, (None, "batch", "heads", None, None))
+
+    def body(carry, ij):
+        o, m, l = carry
+        i, j = ij
+        qi = jax.lax.dynamic_index_in_dim(qc, i, 0, keepdims=False)
+        kj = jax.lax.dynamic_index_in_dim(kc, j, 0, keepdims=False)
+        vj = jax.lax.dynamic_index_in_dim(vc, j, 0, keepdims=False)
+        qp = jax.lax.dynamic_index_in_dim(q_pos, i, 0, keepdims=False)
+        kp = jax.lax.dynamic_index_in_dim(k_pos, j, 0, keepdims=False)
+        # scores: (B, KH, G, cq, ckv) in f32
+        sc = jnp.einsum("bkgqd,bkcd->bkgqc", qi.astype(jnp.float32),
+                        kj.astype(jnp.float32)) * scale
+        if logit_softcap:
+            sc = _softcap(sc, logit_softcap)
+        mask = jnp.ones((cq, ckv), bool)
+        if causal:
+            mask &= kp[None, :] <= qp[:, None]
+        if window:
+            mask &= kp[None, :] > qp[:, None] - window
+        mask &= (kp < t)[None, :]
+        sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+
+        mi = jax.lax.dynamic_index_in_dim(m, i, 0, keepdims=False)
+        li = jax.lax.dynamic_index_in_dim(l, i, 0, keepdims=False)
+        oi = jax.lax.dynamic_index_in_dim(o, i, 0, keepdims=False)
+        m_new = jnp.maximum(mi, sc.max(axis=-1))
+        alpha = jnp.exp(mi - m_new)
+        p = jnp.exp(sc - m_new[..., None])
+        l_new = li * alpha + p.sum(axis=-1)
+        o_new = oi * alpha[..., None] + jnp.einsum(
+            "bkgqc,bkcd->bkgqd", p, vj.astype(jnp.float32))
+        o = jax.lax.dynamic_update_index_in_dim(o, o_new, i, 0)
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new, i, 0)
+        l = jax.lax.dynamic_update_index_in_dim(l, l_new, i, 0)
+        return (o, m, l), None
+
+    # remat the pair body: without this, the scan's backward saves the f32
+    # probability block per pair iteration (~8 GB/device at mixtral train
+    # shapes); recomputing p from the chunk operands is cheap.
+    body = jax.checkpoint(body, prevent_cse=False)
+    (o, m, l), _ = jax.lax.scan(
+        body, (o0, m0, l0), (jnp.asarray(pi), jnp.asarray(pj)))
+    l = jnp.where(l == 0.0, 1.0, l)
+    out = (o / l[..., None]).astype(q.dtype)          # (n_q, B, KH, G, cq, D)
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(b, s_pad, h, d)
+    return out[:, :s]
+
+
+def dense_attention(q, k, v, *, causal=True, window=0, logit_softcap=0.0,
+                    q_offset: int = 0) -> jax.Array:
+    """Reference (materialized-scores) attention — oracle + small shapes."""
+    b, s, h, d = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    qg = q.reshape(b, s, kh, g, d)
+    sc = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
+                    k.astype(jnp.float32)) / math.sqrt(d)
+    if logit_softcap:
+        sc = _softcap(sc, logit_softcap)
+    qp = q_offset + jnp.arange(s)[:, None]
+    kp = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= kp <= qp
+    if window:
+        mask &= kp > qp - window
+    sc = jnp.where(mask, sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    return out.reshape(b, s, h, d).astype(q.dtype)
+
+
+# -- decode attention ------------------------------------------------------------
+
+def decode_attention(q, k_cache, v_cache, cache_pos, *, window: int = 0,
+                     logit_softcap: float = 0.0, ring: bool = False) -> jax.Array:
+    """q: (B, 1, H, D); caches: (B, T, KH, D); cache_pos: () int32 — number of
+    tokens generated so far *including* the current token (already written).
+
+    ``ring=True``: the cache is a rotating window buffer of size T == window;
+    slot j holds the most recent position p with p % T == j, so every written
+    slot is in-window and the mask reduces to slot-written.
+
+    Works with sequence-sharded caches: the softmax reduction over T lowers to
+    an all-reduce (distributed flash-decode)."""
+    b, _, h, d = q.shape
+    t, kh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kh
+    qg = q.reshape(b, kh, g, d)
+    sc = jnp.einsum("bkgd,btkd->bkgt", qg.astype(jnp.float32),
+                    k_cache.astype(jnp.float32)) / math.sqrt(d)
+    if logit_softcap:
+        sc = _softcap(sc, logit_softcap)
+    pos = jnp.arange(t, dtype=jnp.int32)
+    if ring:
+        mask = pos < cache_pos          # pre-wrap; post-wrap all slots valid
+    else:
+        mask = pos < cache_pos
+        if window:
+            mask &= pos > cache_pos - 1 - window
+    sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+    m = sc.max(axis=-1, keepdims=True)
+    p = jnp.exp(sc - m)
+    l = p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bkgt,btkd->bkgd", p / l, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+# -- full attention module ---------------------------------------------------------
+
+def attn_init(key, cfg, dtype):
+    d, h, kh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    kq, kk, kv_, ko = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(kq, d, h * hd, dtype, bias=cfg.qkv_bias),
+        "wk": dense_init(kk, d, kh * hd, dtype, bias=cfg.qkv_bias),
+        "wv": dense_init(kv_, d, kh * hd, dtype, bias=cfg.qkv_bias),
+        "wo": dense_init(ko, h * hd, d, dtype,
+                         scale=0.02 / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def attn_specs(cfg):
+    return {
+        "wq": dense_specs("embed", "qkv", bias=cfg.qkv_bias),
+        "wk": dense_specs("embed", "qkv", bias=cfg.qkv_bias),
+        "wv": dense_specs("embed", "qkv", bias=cfg.qkv_bias),
+        "wo": dense_specs("qkv", "embed"),
+    }
+
+
+def attn_apply(p, x, cfg, *, rules=None, local: bool = False,
+               positions=None, cache=None, cache_pos=None,
+               chunk_q=512, chunk_kv=1024):
+    """Returns (out, new_cache).  cache: dict(k,v) each (B, T, KH, D) or None.
+
+    Modes: cache is None            -> train/prefill without cache retention
+           cache given, S > 1       -> prefill writing into cache
+           cache given, S == 1      -> decode (cache_pos = entries incl. current)
+    """
+    b, s, _ = x.shape
+    h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    window = cfg.window_size if local else 0
+    q = dense_apply(p["wq"], x).reshape(b, s, h, hd)
+    k = dense_apply(p["wk"], x).reshape(b, s, kh, hd)
+    v = dense_apply(p["wv"], x).reshape(b, s, kh, hd)
+    if positions is None:
+        positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+    if cfg.rope:
+        q = rope_apply(q, positions, cfg.rope_theta)
+        k = rope_apply(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None and s == 1:
+        # decode: write current kv (ring-indexed for window caches)
+        t_cache = cache["k"].shape[1]
+        ring = bool(window) and t_cache == window
+        idx = (cache_pos - 1) % t_cache if ring else cache_pos - 1
+        kc = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, idx, 0, 0))
+        vc = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, idx, 0, 0))
+        if rules is not None:
+            kc = rules.constrain(kc, ("batch", "kv_seq", None, None))
+            vc = rules.constrain(vc, ("batch", "kv_seq", None, None))
+        out = decode_attention(q, kc, vc, cache_pos, window=window,
+                               logit_softcap=cfg.attn_logit_softcap, ring=ring)
+        new_cache = {"k": kc, "v": vc}
+    else:
+        # pin head sharding only when the flat layout can't shard evenly
+        # (see flash_attention docstring / EXPERIMENTS.md §Perf it5)
+        pin_rules = None
+        if rules is not None and rules.axis_size(("model",)) > 1 and \
+                cfg.n_heads % rules.axis_size(("model",)) != 0:
+            pin_rules = rules
+        out = flash_attention(
+            q, k, v, causal=True, window=window,
+            logit_softcap=cfg.attn_logit_softcap,
+            chunk_q=chunk_q, chunk_kv=chunk_kv, rules=pin_rules)
+        if cache is not None:
+            # prefill: persist kv into the cache buffer (last t_cache tokens
+            # for ring/window caches; requires s % t_cache == 0 so that ring
+            # slot j keeps holding positions p with p % t_cache == j)
+            t_cache = cache["k"].shape[1]
+            if t_cache < s:
+                assert s % t_cache == 0, (s, t_cache)
+                k_w, v_w = k[:, s - t_cache:], v[:, s - t_cache:]
+            else:
+                k_w, v_w = k, v
+            kc = jax.lax.dynamic_update_slice(
+                cache["k"], k_w.astype(cache["k"].dtype), (0, 0, 0, 0))
+            vc = jax.lax.dynamic_update_slice(
+                cache["v"], v_w.astype(cache["v"].dtype), (0, 0, 0, 0))
+            if rules is not None:
+                kc = rules.constrain(kc, ("batch", "kv_seq", None, None))
+                vc = rules.constrain(vc, ("batch", "kv_seq", None, None))
+            new_cache = {"k": kc, "v": vc}
+
+    out = out.reshape(b, s, h * hd)
+    if rules is not None:
+        out = rules.constrain(out, ("batch", None, "qkv"))
+    out = dense_apply(p["wo"], out)
+    return out, new_cache
+
+
+def make_attn_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16,
+                    *, local: bool = False):
+    """Cache buffers for one attention layer.  Local layers cap at window."""
+    t = min(max_len, cfg.window_size) if (local and cfg.window_size) else max_len
+    kh, hd = cfg.n_kv_heads, cfg.head_dim
+    return {"k": jnp.zeros((batch, t, kh, hd), dtype),
+            "v": jnp.zeros((batch, t, kh, hd), dtype)}
+
+
+def attn_cache_specs():
+    return {"k": ("batch", "kv_seq", None, None),
+            "v": ("batch", "kv_seq", None, None)}

@@ -1,0 +1,190 @@
+"""Block composition: (sequence mixer) + (channel mixer) with pre/post norms.
+
+A *group* is one period of ``cfg.pattern`` (e.g. gemma2: (local, global);
+recurrentgemma: (rglru, rglru, attn_local)); the LM scans over stacked groups.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import recurrent as rec
+from repro.models.modules import (act_fn, dense_apply, dense_init,
+                                  dense_specs, norm_apply, norm_init,
+                                  norm_specs)
+
+ATTN_KINDS = ("attn_global", "attn_local")
+
+
+# -- dense MLP -----------------------------------------------------------------
+
+def mlp_init(key, cfg, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    down_scale = 0.02 / math.sqrt(2 * cfg.n_layers)
+    if cfg.mlp in ("swiglu", "geglu"):
+        return {"w_gate": dense_init(k1, d, f, dtype),
+                "w_up": dense_init(k2, d, f, dtype),
+                "w_down": dense_init(k3, f, d, dtype, scale=down_scale)}
+    return {"w_up": dense_init(k1, d, f, dtype),
+            "w_down": dense_init(k2, f, d, dtype, scale=down_scale)}
+
+
+def mlp_specs(cfg):
+    if cfg.mlp in ("swiglu", "geglu"):
+        return {"w_gate": dense_specs("embed", "d_ff"),
+                "w_up": dense_specs("embed", "d_ff"),
+                "w_down": dense_specs("d_ff", "embed")}
+    return {"w_up": dense_specs("embed", "d_ff"),
+            "w_down": dense_specs("d_ff", "embed")}
+
+
+def mlp_apply(p, x, cfg, *, rules=None):
+    act = act_fn("silu" if cfg.mlp == "swiglu" else "gelu")
+    if cfg.mlp in ("swiglu", "geglu"):
+        h = act(dense_apply(p["w_gate"], x)) * dense_apply(p["w_up"], x)
+    else:
+        h = act(dense_apply(p["w_up"], x))
+    if rules is not None:
+        h = rules.constrain(h, ("batch", None, "d_ff"))
+    return dense_apply(p["w_down"], h)
+
+
+# -- one block -------------------------------------------------------------------
+
+def _mixer_fns(kind: str):
+    return {
+        "attn_global": (attn.attn_init, attn.attn_specs),
+        "attn_local": (attn.attn_init, attn.attn_specs),
+        "mlstm": (rec.mlstm_init, rec.mlstm_specs),
+        "slstm": (rec.slstm_init, rec.slstm_specs),
+        "rglru": (rec.rglru_init, rec.rglru_specs),
+    }[kind]
+
+
+def block_has_mlp(cfg, kind: str) -> bool:
+    # xLSTM blocks carry their own projections; d_ff == 0 disables the MLP.
+    if cfg.d_ff == 0 and cfg.moe is None:
+        return False
+    return True
+
+
+def block_init(key, cfg, kind: str, dtype):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    init, _ = _mixer_fns(kind)
+    p: dict[str, Any] = {
+        "norm1": norm_init(k1, cfg.d_model, dtype, kind=cfg.norm),
+        "mixer": init(k2, cfg, dtype),
+    }
+    if cfg.post_block_norm:
+        p["norm1_post"] = norm_init(k1, cfg.d_model, dtype, kind=cfg.norm)
+    if block_has_mlp(cfg, kind):
+        if not cfg.parallel_block:
+            p["norm2"] = norm_init(k3, cfg.d_model, dtype, kind=cfg.norm)
+        if cfg.moe is not None:
+            p["mlp"] = moe_mod.moe_init(k4, cfg, dtype)
+        else:
+            p["mlp"] = mlp_init(k4, cfg, dtype)
+        if cfg.post_block_norm:
+            p["norm2_post"] = norm_init(k3, cfg.d_model, dtype, kind=cfg.norm)
+    return p
+
+
+def block_specs(cfg, kind: str):
+    _, specs = _mixer_fns(kind)
+    s: dict[str, Any] = {"norm1": norm_specs(cfg.norm), "mixer": specs(cfg)}
+    if cfg.post_block_norm:
+        s["norm1_post"] = norm_specs(cfg.norm)
+    if block_has_mlp(cfg, kind):
+        if not cfg.parallel_block:
+            s["norm2"] = norm_specs(cfg.norm)
+        s["mlp"] = moe_mod.moe_specs(cfg) if cfg.moe is not None \
+            else mlp_specs(cfg)
+        if cfg.post_block_norm:
+            s["norm2_post"] = norm_specs(cfg.norm)
+    return s
+
+
+def block_cache_init(cfg, kind: str, batch: int, max_len: int,
+                     dtype=jnp.bfloat16):
+    if kind in ATTN_KINDS:
+        return attn.make_attn_cache(cfg, batch, max_len, dtype,
+                                    local=(kind == "attn_local"))
+    if kind == "mlstm":
+        return rec.mlstm_state_init(cfg, batch)
+    if kind == "slstm":
+        return rec.slstm_state_init(cfg, batch)
+    if kind == "rglru":
+        return rec.rglru_state_init(cfg, batch)
+    raise ValueError(kind)
+
+
+def block_cache_specs(kind: str):
+    if kind in ATTN_KINDS:
+        return attn.attn_cache_specs()
+    if kind == "mlstm":
+        return rec.mlstm_state_specs()
+    if kind == "slstm":
+        return rec.slstm_state_specs()
+    if kind == "rglru":
+        return rec.rglru_state_specs()
+    raise ValueError(kind)
+
+
+def block_apply(p, x, cfg, kind: str, *, rules=None, cache=None,
+                cache_pos=None, positions=None, chunk_q=512, chunk_kv=1024):
+    """Returns (x_out, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = norm_apply(p["norm1"], x, kind=cfg.norm, eps=cfg.norm_eps)
+
+    new_cache = None
+    if kind in ATTN_KINDS:
+        mix, new_cache = attn.attn_apply(
+            p["mixer"], h, cfg, rules=rules, local=(kind == "attn_local"),
+            positions=positions, cache=cache, cache_pos=cache_pos,
+            chunk_q=chunk_q, chunk_kv=chunk_kv)
+    elif kind == "mlstm":
+        mix, new_cache = rec.mlstm_apply(p["mixer"], h, cfg, state=cache,
+                                         rules=rules)
+    elif kind == "slstm":
+        mix, new_cache = rec.slstm_apply(p["mixer"], h, cfg, state=cache,
+                                         rules=rules)
+    elif kind == "rglru":
+        mix, new_cache = rec.rglru_apply(p["mixer"], h, cfg, state=cache,
+                                         rules=rules)
+    else:
+        raise ValueError(kind)
+
+    if cfg.post_block_norm:
+        mix = norm_apply(p["norm1_post"], mix, kind=cfg.norm, eps=cfg.norm_eps)
+
+    if cfg.parallel_block and block_has_mlp(cfg, kind):
+        # shared-norm parallel attn+mlp (gptj/stablelm style)
+        if cfg.moe is not None:
+            mo, aux, _ = moe_mod.moe_apply(p["mlp"], h, cfg, rules=rules)
+        else:
+            mo = mlp_apply(p["mlp"], h, cfg, rules=rules)
+        x = x + mix + mo
+        if rules is not None:
+            x = rules.constrain(x, ("batch", "residual_seq", None))
+        return x, new_cache, aux
+
+    x = x + mix
+    if block_has_mlp(cfg, kind):
+        h2 = norm_apply(p["norm2"], x, kind=cfg.norm, eps=cfg.norm_eps)
+        if cfg.moe is not None:
+            mo, aux, _ = moe_mod.moe_apply(p["mlp"], h2, cfg, rules=rules)
+        else:
+            mo = mlp_apply(p["mlp"], h2, cfg, rules=rules)
+        if cfg.post_block_norm:
+            mo = norm_apply(p["norm2_post"], mo, kind=cfg.norm,
+                            eps=cfg.norm_eps)
+        x = x + mo
+    if rules is not None:
+        x = rules.constrain(x, ("batch", "residual_seq", None))
+    return x, new_cache, aux

@@ -1,0 +1,151 @@
+"""Minimal functional module system.
+
+No flax dependency: params are nested dicts of jnp arrays; every module is an
+``init_*``/``apply_*`` function pair plus a ``specs_*`` function returning the
+same-structure tree of *logical* sharding axis tuples (resolved by
+``repro.sharding.rules.Rules``).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_INIT_SCALE = 0.02
+
+
+def _normal(key, shape, dtype, scale=DEFAULT_INIT_SCALE):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+# -- dense ------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_dim: int, dtype, *, bias: bool = False,
+               scale: Optional[float] = None):
+    scale = DEFAULT_INIT_SCALE if scale is None else scale
+    p = {"w": _normal(key, (in_dim, out_dim), dtype, scale)}
+    if bias:
+        p["b"] = jnp.zeros((out_dim,), dtype)
+    return p
+
+
+def dense_specs(in_axis: Optional[str], out_axis: Optional[str],
+                *, bias: bool = False):
+    s = {"w": (in_axis, out_axis)}
+    if bias:
+        s["b"] = (out_axis,)
+    return s
+
+
+def dense_apply(p, x):
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+# -- norms ------------------------------------------------------------------
+
+def norm_init(key, dim: int, dtype, *, kind: str = "rmsnorm"):
+    del key
+    if kind == "rmsnorm":
+        return {"scale": jnp.zeros((dim,), dtype)}      # gemma-style (1+scale)
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def norm_specs(kind: str = "rmsnorm"):
+    if kind == "rmsnorm":
+        return {"scale": ("none",)}
+    return {"scale": ("none",), "bias": ("none",)}
+
+
+def norm_apply(p, x, *, kind: str = "rmsnorm", eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps)
+        return (y * (1.0 + p["scale"].astype(jnp.float32))).astype(x.dtype)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+# -- embedding ---------------------------------------------------------------
+
+def embed_init(key, vocab: int, dim: int, dtype):
+    return {"table": _normal(key, (vocab, dim), dtype, 1.0 / math.sqrt(dim))}
+
+
+def embed_specs():
+    # vocab-sharded only: sharding the d_model dim too (FSDP-style) makes the
+    # token gather repartition awkwardly under SPMD (involuntary full remat —
+    # observed on qwen1.5-110b multi-pod).  Replicating d costs <=160 MB/chip
+    # for the largest vocab here.
+    return {"table": ("vocab", None)}
+
+
+def embed_apply(p, tokens):
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def embed_onehot_apply(p, tokens, rules):
+    """Distributed embedding as one_hot @ table.
+
+    With a vocab-sharded table, the backward of a plain gather is a
+    scatter-add whose SPMD lowering all-gathers the full f32 activation
+    cotangent per microbatch (~1 GB/device buffers observed).  As a dot, the
+    table gradient is a shard-local contraction + psum instead."""
+    v = p["table"].shape[0]
+    oh = jax.nn.one_hot(tokens, v, dtype=p["table"].dtype)
+    oh = rules.constrain(oh, ("batch", None, "vocab"))
+    return oh @ p["table"]
+
+
+def unembed_apply(p, x):
+    """Tied read-out: (B,S,D) @ (V,D)^T."""
+    return x @ p["table"].astype(x.dtype).T
+
+
+# -- activations --------------------------------------------------------------
+
+def act_fn(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+        "relu": jax.nn.relu,
+    }[name]
+
+
+def softcap(x, cap: float):
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# -- tree helpers --------------------------------------------------------------
+
+def stack_init(init_fn, key, n: int):
+    """vmap an init over n stacked copies (for lax.scan over layer groups)."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def prepend_layer_axis(spec_tree):
+    """Add the scan ('layers') axis in front of every leaf's logical spec."""
+    return jax.tree.map(
+        lambda t: ("layers",) + t,
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def param_count(tree) -> int:
+    return sum(x.size for x in jax.tree.leaves(tree))
+
+
+def param_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))

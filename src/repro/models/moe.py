@@ -1,0 +1,247 @@
+"""Mixture-of-Experts layer.
+
+Design (TPU-native, GSPMD-friendly): the MoE layer runs inside ``shard_map``.
+Tokens are sharded over the (pod, data) axes and *replicated* over the model
+axis; expert weights are sharded over the model axis — either by expert
+(``partition="ep"``, e.g. qwen3: 128 experts / 16) or by expert-FFN width
+(``partition="tp"``, e.g. mixtral: 8 fat experts, d_ff/16 each).
+
+Each model-rank selects the (token, expert) assignments it owns, compacts them
+into a fixed-capacity per-expert buffer via a *local* sort (no global sort —
+this is exactly the paper's SRP idea applied to MoE dispatch: a monotonic
+partition function over expert ids with per-partition local sorting), computes
+its experts, and the partial outputs are combined with a single ``psum`` over
+the model axis (row-parallel pattern).  Communication per layer = one psum of
+the activation tensor; dispatch stays on-device.
+
+Capacity overflow drops tokens (standard GShard semantics); drop fraction is
+returned for telemetry.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+import warnings as _warnings
+with _warnings.catch_warnings():
+    _warnings.simplefilter("ignore", DeprecationWarning)
+    from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.models.modules import _normal, act_fn
+
+
+def moe_init(key, cfg, dtype):
+    d = cfg.d_model
+    e = cfg.moe
+    kg, k1, k2, k3, ks = jax.random.split(key, 5)
+    p = {
+        "wg": _normal(kg, (d, e.n_experts), jnp.float32),   # router in f32
+        "w_gate": _normal(k1, (e.n_experts, d, e.expert_d_ff), dtype),
+        "w_up": _normal(k2, (e.n_experts, d, e.expert_d_ff), dtype),
+        "w_down": _normal(
+            k3, (e.n_experts, e.expert_d_ff, d), dtype,
+            0.02 / math.sqrt(2 * cfg.n_layers)),
+    }
+    if e.n_shared_experts:
+        f = e.expert_d_ff * e.n_shared_experts
+        p["shared"] = {
+            "w_gate": _normal(ks, (d, f), dtype),
+            "w_up": _normal(jax.random.fold_in(ks, 1), (d, f), dtype),
+            "w_down": _normal(jax.random.fold_in(ks, 2), (f, d), dtype,
+                              0.02 / math.sqrt(2 * cfg.n_layers)),
+        }
+    return p
+
+
+def moe_specs(cfg):
+    e = cfg.moe
+    if e.partition == "ep":
+        w13 = ("experts", "embed", None)
+        w2 = ("experts", None, "embed")
+    else:  # tp: shard expert width
+        w13 = (None, "embed", "d_ff")
+        w2 = (None, "d_ff", "embed")
+    s = {"wg": ("embed", None), "w_gate": w13, "w_up": w13, "w_down": w2}
+    if e.n_shared_experts:
+        s["shared"] = {"w_gate": ("embed", "d_ff"), "w_up": ("embed", "d_ff"),
+                       "w_down": ("d_ff", "embed")}
+    return s
+
+
+def _local_moe(x, wg, w_gate, w_up, w_down, *, cfg, mesh_axes, fsdp: bool,
+               act_name: str = "silu"):
+    """Per-shard MoE body (runs under shard_map).
+
+    x: (N_loc, D) local tokens (replicated over 'model').
+    weights: local slices per moe_specs.
+    Returns (out_local (N_loc, D) — full combined via psum, aux_loss scalar,
+    drop_frac scalar)."""
+    e = cfg.moe
+    n_loc, d = x.shape
+    model_ax = "model"
+    n_model = jax.lax.axis_size(model_ax)
+    my_rank = jax.lax.axis_index(model_ax)
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh_axes)
+
+    if fsdp and "data" in mesh_axes:
+        # FSDP: expert weights arrive sharded over 'data' on the d_model dim;
+        # gather them for compute (the explicit FSDP all-gather).  Cast to
+        # the compute dtype FIRST — otherwise XLA is free to gather the f32
+        # upcast (2x ICI bytes; observed on qwen3 train).
+        w_gate = jax.lax.all_gather(w_gate.astype(x.dtype), "data", axis=1,
+                                    tiled=True)
+        w_up = jax.lax.all_gather(w_up.astype(x.dtype), "data", axis=1,
+                                  tiled=True)
+        w_down = jax.lax.all_gather(w_down.astype(x.dtype), "data", axis=2,
+                                    tiled=True)
+
+    ep = e.partition == "ep"
+    e_loc = w_gate.shape[0]          # local expert count (EP) or all (TP)
+    k = e.top_k
+    n_experts = e.n_experts
+
+    # --- routing (replicated over model axis) ---
+    logits = (x.astype(jnp.float32) @ wg)                   # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)                  # (N, K)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # aux load-balancing loss (global over data axes)
+    me = jnp.mean(probs, axis=0)                            # (E,)
+    ce_local = jnp.zeros((n_experts,), jnp.float32).at[top_e.reshape(-1)].add(
+        1.0 / (n_loc * k))
+    if data_axes:
+        me = jax.lax.pmean(me, data_axes)
+        ce = jax.lax.pmean(ce_local, data_axes)
+    else:
+        ce = ce_local
+    aux = e.router_aux_coef * n_experts * jnp.sum(me * ce)
+
+    # --- local compaction (SRP-style: partition by expert id, local sort) ---
+    flat_e = top_e.reshape(-1)                              # (N*K,)
+    flat_t = jnp.repeat(jnp.arange(n_loc, dtype=jnp.int32), k)
+    flat_w = top_w.reshape(-1)
+    if ep:
+        first = my_rank * e_loc
+        mine = (flat_e >= first) & (flat_e < first + e_loc)
+        local_e = jnp.where(mine, flat_e - first, e_loc)    # e_loc = dump
+        cap = max(1, int(math.ceil(n_loc * k * e.capacity_factor / n_experts)))
+    else:
+        local_e = flat_e
+        mine = jnp.ones_like(flat_e, bool)
+        cap = max(1, int(math.ceil(n_loc * k * e.capacity_factor / n_experts)))
+
+    order = jnp.argsort(local_e, stable=True)
+    se = local_e[order]
+    st = flat_t[order]
+    sw = flat_w[order]
+    counts = jnp.zeros((e_loc + 1,), jnp.int32).at[se].add(1)
+    offs = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                            jnp.cumsum(counts)[:-1]])
+    pos = jnp.arange(se.shape[0], dtype=jnp.int32) - offs[se]
+    keep = (pos < cap) & (se < e_loc)
+    n_slots = e_loc * cap
+    slot = jnp.where(keep, se * cap + pos, n_slots)         # n_slots = drop
+
+    xb = jnp.zeros((n_slots + 1, d), x.dtype)
+    xb = xb.at[slot].set(x[st], mode="drop")
+    xb = xb[:n_slots].reshape(e_loc, cap, d)
+
+    h = jnp.einsum("ecd,edf->ecf", xb, w_gate.astype(x.dtype))
+    u = jnp.einsum("ecd,edf->ecf", xb, w_up.astype(x.dtype))
+    y = jnp.einsum("ecf,efd->ecd", act_fn(act_name)(h) * u,
+                   w_down.astype(x.dtype))
+    y_flat = y.reshape(n_slots, d)
+    gathered = jnp.take(y_flat, jnp.minimum(slot, n_slots - 1), axis=0)
+    # NOTE: keep is in SORTED order (as are st/sw/slot); `se < e_loc` is the
+    # sorted-order ownership mask, already folded into keep.
+    gathered = gathered * keep[:, None]
+
+    out = jnp.zeros((n_loc, d), jnp.float32).at[st].add(
+        gathered.astype(jnp.float32) * sw[:, None])
+    out = jax.lax.psum(out, model_ax)
+
+    # drop fraction telemetry (of this rank's assignments; sorted order)
+    smine = se < e_loc
+    dropped = jnp.sum(smine & ~keep).astype(jnp.float32)
+    total = jnp.maximum(jnp.sum(smine.astype(jnp.float32)), 1.0)
+    drop_frac = jax.lax.pmax(dropped / total, model_ax)
+    return out.astype(x.dtype), aux, drop_frac
+
+
+def moe_apply(p, x, cfg, *, rules=None, act_name: str = "silu"):
+    """x: (B, S, D). Returns (y, aux_loss, drop_frac)."""
+    b, s, d = x.shape
+    e = cfg.moe
+    xf = x.reshape(b * s, d)
+
+    if rules is None:
+        # single-device path (smoke tests): emulate one shard, no collectives
+        out, aux, drop = _local_moe_nodist(xf, p, cfg, act_name)
+        y = out.reshape(b, s, d)
+    else:
+        mesh = rules.mesh
+        axes = mesh.axis_names
+        batch_axes = tuple(a for a in ("pod", "data") if a in axes)
+        # decode/small batches: only shard token dim over axes that divide it
+        sz = 1
+        kept = []
+        for a in batch_axes:
+            if (b * s) % (sz * mesh.shape[a]) == 0:
+                kept.append(a)
+                sz *= mesh.shape[a]
+        batch_axes = tuple(kept)
+        ep = e.partition == "ep"
+        w13_spec = P("model", rules.table["embed"] and "data" or None, None) \
+            if ep else P(None, rules.table["embed"] and "data" or None, "model")
+        w2_spec = P("model", None, rules.table["embed"] and "data" or None) \
+            if ep else P(None, "model", rules.table["embed"] and "data" or None)
+        fn = partial(_local_moe, cfg=cfg, mesh_axes=axes,
+                     fsdp=rules.table["embed"] is not None,
+                     act_name=act_name)
+        tok_dim = batch_axes if batch_axes else None
+        out, aux, drop = shard_map(
+            fn, mesh=mesh,
+            in_specs=(P(tok_dim, None), P(None, None),
+                      w13_spec, w13_spec, w2_spec),
+            out_specs=(P(tok_dim, None), P(), P()),
+            check_rep=False,
+        )(xf, p["wg"], p["w_gate"], p["w_up"], p["w_down"])
+        y = out.reshape(b, s, d)
+
+    if e.n_shared_experts:
+        sp = p["shared"]
+        h = act_fn(act_name)(xf @ sp["w_gate"].astype(x.dtype))
+        u = xf @ sp["w_up"].astype(x.dtype)
+        y = y + ((h * u) @ sp["w_down"].astype(x.dtype)).reshape(b, s, d)
+    return y, aux, drop
+
+
+def _local_moe_nodist(xf, p, cfg, act_name):
+    """Single-device oracle (no collectives) — also the smoke-test path."""
+    e = cfg.moe
+    n, d = xf.shape
+    k = e.top_k
+    logits = xf.astype(jnp.float32) @ p["wg"]
+    probs = jax.nn.softmax(logits, -1)
+    top_w, top_e = jax.lax.top_k(probs, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.zeros((e.n_experts,), jnp.float32).at[top_e.reshape(-1)].add(
+        1.0 / (n * k))
+    aux = e.router_aux_coef * e.n_experts * jnp.sum(me * ce)
+
+    out = jnp.zeros((n, d), jnp.float32)
+    act = act_fn(act_name)
+    for ei in range(e.n_experts):
+        w = jnp.where(top_e == ei, top_w, 0.0).sum(-1)       # (N,)
+        h = act(xf @ p["w_gate"][ei].astype(xf.dtype))
+        u = xf @ p["w_up"][ei].astype(xf.dtype)
+        y = (h * u) @ p["w_down"][ei].astype(xf.dtype)
+        out = out + y.astype(jnp.float32) * w[:, None]
+    return out.astype(xf.dtype), aux, jnp.zeros(())

@@ -1,0 +1,367 @@
+"""Recurrent sequence-mixing blocks: xLSTM (mLSTM + sLSTM) and RG-LRU (Griffin).
+
+mLSTM uses a stabilized *chunkwise-parallel* form (scan over chunks, dense
+intra-chunk math on the MXU) for train/prefill and a single-step state update
+for decode.  sLSTM is inherently sequential (recurrent weights) -> lax.scan.
+RG-LRU uses jax.lax.associative_scan for train/prefill.
+
+All decode paths carry explicit state pytrees ("recurrent caches") so that
+``serve_step`` is O(1) per token regardless of context length — this is why
+the ssm/hybrid archs run the long_500k cell.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.modules import _normal, dense_apply, dense_init, dense_specs
+
+F32 = jnp.float32
+
+
+# =====================================================================
+# mLSTM
+# =====================================================================
+
+def mlstm_init(key, cfg, dtype):
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    ks = jax.random.split(key, 6)
+    inner = h * hd
+    return {
+        "wq": dense_init(ks[0], d, inner, dtype),
+        "wk": dense_init(ks[1], d, inner, dtype),
+        "wv": dense_init(ks[2], d, inner, dtype),
+        "wif": dense_init(ks[3], d, 2 * h, dtype, bias=True),   # i~, f~ gates
+        "wo_gate": dense_init(ks[4], d, inner, dtype),          # output gate
+        "wo": dense_init(ks[5], inner, d, dtype,
+                         scale=0.02 / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def mlstm_specs(cfg):
+    return {
+        "wq": dense_specs("embed", "qkv"),
+        "wk": dense_specs("embed", "qkv"),
+        "wv": dense_specs("embed", "qkv"),
+        "wif": dense_specs("embed", None, bias=True),
+        "wo_gate": dense_specs("embed", "qkv"),
+        "wo": dense_specs("qkv", "embed"),
+    }
+
+
+def mlstm_state_init(cfg, batch: int, dtype=F32):
+    h, hd = cfg.n_heads, cfg.head_dim
+    return {
+        "C": jnp.zeros((batch, h, hd, hd), dtype),   # stabilized Ĉ
+        "n": jnp.zeros((batch, h, hd), dtype),
+        "m": jnp.full((batch, h), -1e30, dtype),
+    }
+
+
+def mlstm_state_specs():
+    return {"C": ("batch", "heads", None, None),
+            "n": ("batch", "heads", None),
+            "m": ("batch", "heads")}
+
+
+def _mlstm_gates(p, x, h):
+    """Returns (logi, logf) each (B, S, H) in f32."""
+    g = dense_apply(p["wif"], x).astype(F32)
+    logi, fraw = jnp.split(g, 2, axis=-1)
+    logf = -jax.nn.softplus(-fraw)          # log sigmoid(f~)
+    return logi, logf
+
+
+def mlstm_apply(p, x, cfg, *, state=None, chunk: int = 256, rules=None):
+    """x: (B, S, D).  Returns (y, new_state).
+
+    S == 1 with state  -> decode step.
+    S > 1              -> chunkwise-parallel scan (state optional, default 0).
+    """
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    scale = 1.0 / math.sqrt(hd)
+    q = dense_apply(p["wq"], x).reshape(b, s, h, hd)
+    k = dense_apply(p["wk"], x).reshape(b, s, h, hd)
+    v = dense_apply(p["wv"], x).reshape(b, s, h, hd)
+    logi, logf = _mlstm_gates(p, x, h)
+
+    if state is None:
+        state = mlstm_state_init(cfg, b)
+
+    if s == 1:
+        y, new_state = _mlstm_step(
+            q[:, 0], k[:, 0] * scale, v[:, 0],
+            logi[:, 0], logf[:, 0], state)
+        y = y[:, None]
+    else:
+        y, new_state = _mlstm_chunked(
+            q, k * scale, v, logi, logf, state, chunk=min(chunk, s))
+
+    o_gate = jax.nn.sigmoid(dense_apply(p["wo_gate"], x).astype(F32))
+    y = (y.reshape(b, s, h * hd).astype(F32) * o_gate).astype(x.dtype)
+    if rules is not None:
+        y = rules.constrain(y, ("batch", None, "qkv"))
+    return dense_apply(p["wo"], y), new_state
+
+
+def _mlstm_step(q, k, v, logi, logf, state):
+    """Single-token update.  q,k,v: (B,H,hd); gates: (B,H)."""
+    C, n, m = state["C"], state["n"], state["m"]
+    m_new = jnp.maximum(logf + m, logi)
+    a = jnp.exp(logf + m - m_new)           # decay of old state
+    bq = jnp.exp(logi - m_new)              # injection weight
+    C_new = a[..., None, None] * C + bq[..., None, None] * (
+        k[..., :, None] * v[..., None, :])  # (B,H,hd_k,hd_v)
+    n_new = a[..., None] * n + bq[..., None] * k
+    num = jnp.einsum("bhkv,bhk->bhv", C_new, q.astype(F32))
+    den = jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, q.astype(F32)))
+    den = jnp.maximum(den, jnp.exp(-m_new))
+    y = num / den[..., None]
+    return y, {"C": C_new, "n": n_new, "m": m_new}
+
+
+def _mlstm_chunked(q, k, v, logi, logf, state, *, chunk: int):
+    """Chunkwise-parallel stabilized mLSTM.
+
+    q,k,v: (B,S,H,hd); logi/logf: (B,S,H).  state: dict(C,n,m).
+    """
+    b, s, h, hd = q.shape
+    if s % chunk:
+        pad = chunk - s % chunk
+        zf = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        q, k, v = zf(q), zf(k), zf(v)
+        logi = jnp.pad(logi, ((0, 0), (0, pad), (0, 0)))
+        # padded steps: f=1 (logf=0) keeps state, i -> -inf drops input
+        logf = jnp.pad(logf, ((0, 0), (0, pad), (0, 0)))
+        logi = logi.at[:, s:].set(-1e30)
+    sp = q.shape[1]
+    nc = sp // chunk
+    # (B, nc, L, H, ...)
+    rs = lambda t: t.reshape((b, nc, chunk) + t.shape[2:])
+    qc, kc, vc = rs(q), rs(k), rs(v)
+    lic = rs(logi).transpose(0, 1, 3, 2)     # (B,nc,H,L)
+    lfc = rs(logf).transpose(0, 1, 3, 2)
+
+    def chunk_body(carry, xs):
+        C, n, m = carry                                       # Ĉ,n̂ (stab), m
+        qi, ki, vi, li, lf = xs                               # per-chunk
+        # qi: (B,L,H,hd) -> (B,H,L,hd)
+        qi = qi.transpose(0, 2, 1, 3).astype(F32)
+        ki = ki.transpose(0, 2, 1, 3).astype(F32)
+        vi = vi.transpose(0, 2, 1, 3).astype(F32)
+        F = jnp.cumsum(lf, axis=-1)                           # (B,H,L) inclusive
+        Ftot = F[..., -1:]                                    # (B,H,1)
+        # per-position stabilizer: m_i = max(m_prev + F_i, max_{j<=i}(li_j - F_j) + F_i)
+        g = li - F                                            # (B,H,L)
+        gmax = jax.lax.cummax(g, axis=g.ndim - 1)
+        m_i = jnp.maximum(m[..., None], gmax) + F             # (B,H,L)
+        m_i = jnp.maximum(m_i, -1e30)
+        # inter contribution: exp(m_prev + F_i - m_i) * (Ĉ_prev^T q_i)
+        w_inter = jnp.exp(m[..., None] + F - m_i)             # (B,H,L)
+        inter_num = jnp.einsum("bhkv,bhlk->bhlv", C, qi)      # (B,H,L,hd)
+        inter_den = jnp.einsum("bhk,bhlk->bhl", n, qi)
+        # intra: D_ij = exp(li_j + F_i - F_j - m_i) for j<=i
+        logD = li[..., None, :] + F[..., :, None] - F[..., None, :] \
+            - m_i[..., :, None]                               # (B,H,L_i,L_j)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        D = jnp.where(tri, jnp.exp(logD), 0.0)
+        sc = jnp.einsum("bhik,bhjk->bhij", qi, ki) * D        # (B,H,L,L)
+        intra_num = jnp.einsum("bhij,bhjv->bhiv", sc, vi)
+        intra_den = jnp.einsum("bhij->bhi", sc)
+        num = intra_num + w_inter[..., None] * inter_num
+        den = jnp.abs(intra_den + w_inter * inter_den)
+        den = jnp.maximum(den, jnp.exp(-m_i))
+        y = num / den[..., None]                              # (B,H,L,hd)
+        # state update to end of chunk
+        gk = li + Ftot - F                                    # weight for k_j v_j
+        m_chunk = jnp.max(gk, axis=-1)                        # (B,H)
+        m_new = jnp.maximum(m + Ftot[..., 0], m_chunk)
+        wC = jnp.exp(gk - m_new[..., None])                   # (B,H,L)
+        C_new = jnp.exp(m + Ftot[..., 0] - m_new)[..., None, None] * C + \
+            jnp.einsum("bhl,bhlk,bhlv->bhkv", wC, ki, vi)
+        n_new = jnp.exp(m + Ftot[..., 0] - m_new)[..., None] * n + \
+            jnp.einsum("bhl,bhlk->bhk", wC, ki)
+        return (C_new, n_new, m_new), y.transpose(0, 2, 1, 3)  # (B,L,H,hd)
+
+    xs = (qc.transpose(1, 0, 2, 3, 4), kc.transpose(1, 0, 2, 3, 4),
+          vc.transpose(1, 0, 2, 3, 4), lic.transpose(1, 0, 2, 3),
+          lfc.transpose(1, 0, 2, 3))
+    (C, n, m), ys = jax.lax.scan(
+        chunk_body, (state["C"], state["n"], state["m"]), xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, sp, h, hd)[:, :s]
+    return y, {"C": C, "n": n, "m": m}
+
+
+# =====================================================================
+# sLSTM
+# =====================================================================
+
+def slstm_init(key, cfg, dtype):
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    inner = h * hd
+    ks = jax.random.split(key, 3)
+    return {
+        # input projections for z,i,f,o (fused)
+        "wx": dense_init(ks[0], d, 4 * inner, dtype, bias=True),
+        # recurrent (block-diagonal per head): (H, hd, 4*hd)
+        "r": _normal(ks[1], (h, hd, 4 * hd), dtype),
+        "wo": dense_init(ks[2], inner, d, dtype,
+                         scale=0.02 / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def slstm_specs(cfg):
+    return {"wx": dense_specs("embed", None, bias=True),
+            "r": ("heads", None, None),
+            "wo": dense_specs(None, "embed")}
+
+
+def slstm_state_init(cfg, batch: int, dtype=F32):
+    h, hd = cfg.n_heads, cfg.head_dim
+    z = lambda: jnp.zeros((batch, h, hd), dtype)
+    return {"c": z(), "n": z(), "h": z(),
+            "m": jnp.full((batch, h, hd), -1e30, dtype)}
+
+
+def slstm_state_specs():
+    t = ("batch", "heads", None)
+    return {"c": t, "n": t, "h": t, "m": t}
+
+
+def slstm_apply(p, x, cfg, *, state=None, rules=None):
+    """x: (B,S,D) -> (y, new_state).  Sequential lax.scan over time."""
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    if state is None:
+        state = slstm_state_init(cfg, b)
+    wx = dense_apply(p["wx"], x).astype(F32)            # (B,S,4*inner)
+    wx = wx.reshape(b, s, 4, h, hd)
+    r = p["r"].astype(F32)
+
+    def step(carry, xt):
+        c, n, hprev, m = carry
+        # recurrent contribution: (B,H,hd) @ (H,hd,4hd) -> (B,H,4,hd)
+        rec = jnp.einsum("bhk,hkf->bhf", hprev, r).reshape(b, h, 4, hd)
+        zi = xt[:, 0] + rec[:, :, 0]
+        ii = xt[:, 1] + rec[:, :, 1]
+        fi = xt[:, 2] + rec[:, :, 2]
+        oi = xt[:, 3] + rec[:, :, 3]
+        z = jnp.tanh(zi)
+        o = jax.nn.sigmoid(oi)
+        logf = -jax.nn.softplus(-fi)
+        m_new = jnp.maximum(logf + m, ii)
+        a = jnp.exp(logf + m - m_new)
+        bq = jnp.exp(ii - m_new)
+        c_new = a * c + bq * z
+        n_new = a * n + bq
+        h_new = o * c_new / jnp.maximum(n_new, 1.0)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    xs = wx.transpose(1, 0, 3, 2, 4)                    # (S,B,H,4,hd)
+    (c, n, hh, m), ys = jax.lax.scan(
+        step, (state["c"], state["n"], state["h"], state["m"]), xs)
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s, h * hd).astype(x.dtype)
+    y = dense_apply(p["wo"], y)
+    return y, {"c": c, "n": n, "h": hh, "m": m}
+
+
+# =====================================================================
+# RG-LRU (Griffin / recurrentgemma recurrent block)
+# =====================================================================
+
+def rglru_init(key, cfg, dtype):
+    d = cfg.d_model
+    rdim = cfg.rglru_dim or d
+    ks = jax.random.split(key, 7)
+    # Λ init so that a = sigmoid(Λ)^c in [0.9, 0.999]
+    u = jax.random.uniform(ks[5], (rdim,), F32, 0.9, 0.999)
+    lam = jnp.log((u ** (1.0 / 8.0)) / (1 - u ** (1.0 / 8.0)))
+    return {
+        "w_in": dense_init(ks[0], d, rdim, dtype),       # recurrence branch
+        "w_gate_in": dense_init(ks[1], d, rdim, dtype),  # gelu gate branch
+        "conv_w": _normal(ks[2], (4, rdim), dtype),      # temporal conv width 4
+        "conv_b": jnp.zeros((rdim,), dtype),
+        "w_rg": dense_init(ks[3], rdim, rdim, dtype),    # recurrence gate r
+        "w_ig": dense_init(ks[4], rdim, rdim, dtype),    # input gate i
+        "lam": lam,
+        "w_out": dense_init(ks[6], rdim, d, dtype,
+                            scale=0.02 / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def rglru_specs(cfg):
+    return {
+        "w_in": dense_specs("embed", "d_ff"),
+        "w_gate_in": dense_specs("embed", "d_ff"),
+        "conv_w": (None, "d_ff"),
+        "conv_b": ("d_ff",),
+        # (R, R) gate maps: row-parallel (contract over the sharded R dim,
+        # psum) — sharding both dims on 'model' is illegal in one spec.
+        "w_rg": dense_specs("d_ff", None),
+        "w_ig": dense_specs("d_ff", None),
+        "lam": ("d_ff",),
+        "w_out": dense_specs("d_ff", "embed"),
+    }
+
+
+def rglru_state_init(cfg, batch: int, dtype=F32):
+    rdim = cfg.rglru_dim or cfg.d_model
+    return {"h": jnp.zeros((batch, rdim), dtype),
+            "conv": jnp.zeros((batch, 3, rdim), dtype)}
+
+
+def rglru_state_specs():
+    return {"h": ("batch", "d_ff"), "conv": ("batch", None, "d_ff")}
+
+
+_RG_C = 8.0
+
+
+def rglru_apply(p, x, cfg, *, state=None, rules=None):
+    """Griffin recurrent block. x: (B,S,D) -> (y, new_state)."""
+    b, s, d = x.shape
+    rdim = cfg.rglru_dim or d
+    if state is None:
+        state = rglru_state_init(cfg, b)
+    u = dense_apply(p["w_in"], x)                        # (B,S,R)
+    gate = jax.nn.gelu(dense_apply(p["w_gate_in"], x).astype(F32))
+
+    # temporal conv width 4 (causal), carrying last-3 inputs as decode state
+    hist = state["conv"].astype(u.dtype)                 # (B,3,R)
+    uc = jnp.concatenate([hist, u], axis=1)              # (B,S+3,R)
+    w = p["conv_w"].astype(F32)
+    conv = sum(uc[:, i:i + s].astype(F32) * w[i] for i in range(4))
+    conv = conv + p["conv_b"].astype(F32)                # (B,S,R)
+    new_conv = uc[:, -3:].astype(F32)
+
+    r = jax.nn.sigmoid(dense_apply(p["w_rg"], conv.astype(u.dtype)).astype(F32))
+    i = jax.nn.sigmoid(dense_apply(p["w_ig"], conv.astype(u.dtype)).astype(F32))
+    log_a = -_RG_C * r * jax.nn.softplus(-p["lam"].astype(F32))  # log sigmoid(Λ)^(c·r)
+    a = jnp.exp(log_a)                                   # (B,S,R)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * conv)
+
+    if s == 1:
+        h = a[:, 0] * state["h"] + gated[:, 0]
+        hs = h[:, None]
+        new_h = h
+    else:
+        # associative scan: h_t = a_t h_{t-1} + b_t, with h_0 folded into b_1
+        bb = gated.at[:, 0].add(a[:, 0] * state["h"])
+
+        def comb(l, r_):
+            al, bl = l
+            ar, br = r_
+            return al * ar, ar * bl + br
+
+        _, hs = jax.lax.associative_scan(comb, (a, bb), axis=1)
+        new_h = hs[:, -1]
+
+    y = (hs * gate).astype(x.dtype)                      # (B,S,R)
+    if rules is not None:
+        y = rules.constrain(y, ("batch", None, "d_ff"))
+    y = dense_apply(p["w_out"], y)
+    return y, {"h": new_h, "conv": new_conv}

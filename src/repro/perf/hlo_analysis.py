@@ -1,0 +1,260 @@
+"""Structural analyzer for post-SPMD HLO text.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE, but a scanned
+transformer executes it n_groups (and microbatch) times — so FLOPs, HBM and
+collective bytes must be re-derived by walking the call graph with loop
+trip-count multipliers.  This module parses ``compiled.as_text()`` (per-device
+module), builds the computation call graph, extracts while trip counts from
+their condition computations, and accumulates:
+
+  * dot FLOPs        2 * prod(result_dims) * prod(lhs_contracting_dims)
+  * dot bytes        lhs + rhs + result buffer bytes (HBM-traffic proxy)
+  * collective bytes per kind (all-reduce counted 2x for ring cost)
+
+All values are per-device (the SPMD module is single-program).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+_SHAPE_TOKEN = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HEADER = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+)$")
+_OPCODE = re.compile(r"^((?:\([^=]*\)|[\w\[\],\{\} ]+?))\s*([\w\-]+)\(")
+_CALL_ATTR = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w\.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+
+def _shape_dims(tok: re.Match) -> Tuple[int, List[int]]:
+    dt, dims = tok.group(1), tok.group(2)
+    if dt not in _DTYPE_BYTES:
+        return 0, []
+    ds = [int(d) for d in dims.split(",") if d]
+    n = 1
+    for d in ds:
+        n *= d
+    return n * _DTYPE_BYTES[dt], ds
+
+
+def _type_bytes(type_str: str, *, largest_only: bool = False) -> int:
+    vals = []
+    for tok in _SHAPE_TOKEN.finditer(type_str):
+        b, _ = _shape_dims(tok)
+        vals.append(b)
+    if not vals:
+        return 0
+    return max(vals) if largest_only else sum(vals)
+
+
+@dataclass
+class Instr:
+    name: str
+    opcode: str
+    type_str: str
+    rhs: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    defs: Dict[str, str] = field(default_factory=dict)   # name -> type str
+    is_entry: bool = False
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = re.sub(r"/\*.*?\*/", "", raw).rstrip()
+        s = line.strip()
+        if not s:
+            continue
+        m = _COMP_HEADER.match(s)
+        if m and s.endswith("{"):
+            cur = Computation(name=m.group(2), is_entry=bool(m.group(1)))
+            comps[cur.name] = cur
+            # parameters from header
+            for pm in re.finditer(r"([\w\.\-]+):\s*((?:\([^)]*\)|[\w\[\],]+))",
+                                  m.group(3)):
+                cur.defs[pm.group(1)] = pm.group(2)
+            continue
+        if s == "}" or cur is None:
+            continue
+        im = _INSTR.match(s)
+        if not im:
+            continue
+        name, rhs = im.group(1), im.group(2)
+        om = _OPCODE.match(rhs)
+        if not om:
+            continue
+        type_str, opcode = om.group(1), om.group(2)
+        cur.defs[name] = type_str
+        cur.instrs.append(Instr(name, opcode, type_str, rhs))
+    return comps
+
+
+def _while_trip_count(comps: Dict[str, Computation], cond_name: str) -> int:
+    """Max s32 constant in the condition computation ~= scan bound."""
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1
+    best = 1
+    for ins in cond.instrs:
+        if ins.opcode == "constant" and "s32" in ins.type_str:
+            m = re.search(r"constant\((-?\d+)\)", ins.rhs)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _multipliers(comps: Dict[str, Computation]) -> Dict[str, float]:
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    mult: Dict[str, float] = {}
+    if entry is None:
+        return {c: 1.0 for c in comps}
+    stack = [(entry.name, 1.0)]
+    while stack:
+        name, m = stack.pop()
+        if mult.get(name, 0.0) >= m and name in mult:
+            continue
+        mult[name] = max(mult.get(name, 0.0), m)
+        comp = comps[name]
+        for ins in comp.instrs:
+            if ins.opcode == "while":
+                cm = re.search(r"condition=%?([\w\.\-]+)", ins.rhs)
+                bm = re.search(r"body=%?([\w\.\-]+)", ins.rhs)
+                trip = _while_trip_count(comps, cm.group(1)) if cm else 1
+                if bm and bm.group(1) in comps:
+                    stack.append((bm.group(1), m * trip))
+                if cm and cm.group(1) in comps:
+                    stack.append((cm.group(1), m * (trip + 1)))
+            else:
+                bm = _BRANCHES.search(ins.rhs)
+                if bm:
+                    for b in bm.group(1).split(","):
+                        b = b.strip().lstrip("%")
+                        if b in comps:
+                            stack.append((b, m))
+                for cm in _CALL_ATTR.finditer(ins.rhs):
+                    if "while" not in ins.opcode and cm.group(1) in comps:
+                        stack.append((cm.group(1), m))
+    for c in comps:
+        mult.setdefault(c, 1.0)
+    return mult
+
+
+def _operand_names(rhs: str) -> List[str]:
+    inner = rhs[rhs.find("(") + 1:]
+    depth = 1
+    out = []
+    buf = []
+    for ch in inner:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        buf.append(ch)
+    arg_str = "".join(buf)
+    for m in re.finditer(r"%([\w\.\-]+)", arg_str):
+        out.append(m.group(1))
+    if not out:
+        # operands may be given without % in newer dumps: name, name
+        for tok in arg_str.split(","):
+            tok = tok.strip().split(" ")[-1]
+            if tok:
+                out.append(tok)
+    return out
+
+
+def _dot_flops(comp: Computation, ins: Instr) -> float:
+    res_bytes_dims = list(_SHAPE_TOKEN.finditer(ins.type_str))
+    if not res_bytes_dims:
+        return 0.0
+    _, res_dims = _shape_dims(res_bytes_dims[0])
+    n_res = 1
+    for d in res_dims:
+        n_res *= d
+    lhs_contract = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rhs)
+    ops = _operand_names(ins.rhs)
+    contract = 1
+    if lhs_contract and ops:
+        lhs_type = comp.defs.get(ops[0], "")
+        tm = _SHAPE_TOKEN.search(lhs_type)
+        if tm:
+            _, lhs_dims = _shape_dims(tm)
+            for idx in lhs_contract.group(1).split(","):
+                if idx and int(idx) < len(lhs_dims):
+                    contract *= lhs_dims[int(idx)]
+    return 2.0 * n_res * contract
+
+
+def _dot_bytes(comp: Computation, ins: Instr) -> float:
+    total = _type_bytes(ins.type_str)
+    for op in _operand_names(ins.rhs)[:2]:
+        total += _type_bytes(comp.defs.get(op, ""))
+    return float(total)
+
+
+def analyze(text: str) -> dict:
+    comps = parse_module(text)
+    mult = _multipliers(comps)
+    flops = 0.0
+    dot_bytes = 0.0
+    coll = {k: {"bytes": 0.0, "count": 0.0} for k in COLLECTIVE_OPS}
+    whiles = []
+    for comp in comps.values():
+        m = mult[comp.name]
+        for ins in comp.instrs:
+            op = ins.opcode
+            if op == "dot":
+                flops += m * _dot_flops(comp, ins)
+                dot_bytes += m * _dot_bytes(comp, ins)
+            elif op == "while":
+                cm = re.search(r"condition=%?([\w\.\-]+)", ins.rhs)
+                whiles.append({
+                    "name": ins.name,
+                    "trip": _while_trip_count(comps, cm.group(1)) if cm else 1,
+                    "mult": m})
+            else:
+                base = op[:-6] if op.endswith("-start") else op
+                if base in COLLECTIVE_OPS and not op.endswith("-done"):
+                    b = _type_bytes(ins.type_str, largest_only=True)
+                    factor = 2.0 if base == "all-reduce" else 1.0
+                    coll[base]["bytes"] += m * b * factor
+                    coll[base]["count"] += m
+                    # TPU-adjusted width: XLA:CPU promotes bf16 dots to f32
+                    # and psums ride the f32 dot output (verified on phi4 —
+                    # EXPERIMENTS.md §Perf); all model state is bf16, so f32
+                    # collectives are counted at native-bf16 width too.
+                    adj = 0.5 if "f32[" in ins.type_str else 1.0
+                    coll[base]["bytes_bf16adj"] = coll[base].get(
+                        "bytes_bf16adj", 0.0) + m * b * factor * adj
+    total_coll = sum(v["bytes"] for v in coll.values())
+    total_adj = sum(v.get("bytes_bf16adj", 0.0) for v in coll.values())
+    return {
+        "dot_flops": flops,
+        "dot_bytes": dot_bytes,
+        "collectives": coll,
+        "collective_bytes": total_coll,
+        "collective_bytes_bf16adj": total_adj,
+        "whiles": whiles,
+        "n_computations": len(comps),
+    }
+
+
+def analyze_compiled(compiled) -> dict:
+    return analyze(compiled.as_text())

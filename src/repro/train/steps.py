@@ -1,0 +1,153 @@
+"""Step functions: train_step / prefill_step / decode_step factories.
+
+Each factory returns (fn, in_shardings, out_shardings, example_inputs) so the
+launcher can jit + lower uniformly for real runs and for the dry-run.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models import lm
+from repro.sharding.rules import Rules
+from repro.train import optim
+
+
+# -- state -----------------------------------------------------------------------
+
+def train_state_init(key, cfg: ModelConfig, dtype=jnp.bfloat16):
+    params = lm.lm_init(key, cfg, dtype)
+    return {"params": params, "opt": optim.adamw_init(params)}
+
+
+def train_state_specs(cfg: ModelConfig):
+    ps = lm.lm_specs(cfg)
+    return {"params": ps, "opt": optim.adamw_specs(ps)}
+
+
+# -- logical->sharding resolution ---------------------------------------------------
+
+def _is_logical_leaf(x):
+    return isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+
+
+def resolve_shardings(rules: Rules, spec_tree, shape_tree):
+    """spec_tree of logical tuples + shape tree (arrays or SDS) -> NamedShardings."""
+    def resolve(logical, arr):
+        return rules.sharding(logical, arr.shape)
+    return jax.tree.map(resolve, spec_tree, shape_tree,
+                        is_leaf=_is_logical_leaf)
+
+
+# -- train -------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, run: RunConfig, rules: Rules,
+                    oc: Optional[optim.OptConfig] = None):
+    oc = oc or optim.OptConfig()
+
+    def loss_fn(params, batch):
+        return lm.lm_loss(params, cfg, batch, rules=rules, remat=run.remat,
+                          chunk_q=run.attn_chunk_q, chunk_kv=run.attn_chunk_kv)
+
+    def train_step(state, batch):
+        if run.microbatch and run.microbatch > 1:
+            nmb = run.microbatch
+            b = batch["tokens" if "tokens" in batch else "embeds"].shape[0]
+            assert b % nmb == 0
+            mb = jax.tree.map(
+                lambda x: x.reshape((nmb, b // nmb) + x.shape[1:]), batch)
+
+            def acc_body(carry, mbatch):
+                (loss, metrics), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(state["params"], mbatch)
+                carry = jax.tree.map(jnp.add, carry, g)
+                return carry, metrics
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state["params"])
+            grads, metrics = jax.lax.scan(acc_body, g0, mb)
+            grads = jax.tree.map(lambda g: g / nmb, grads)
+            metrics = jax.tree.map(lambda m: m.mean(), metrics)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(state["params"], batch)
+        new_params, new_opt, om = optim.adamw_update(
+            grads, state["opt"], state["params"], oc)
+        metrics = dict(metrics, **om)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def train_batch_spec(cfg: ModelConfig, run: RunConfig):
+    """Logical sharding spec tree for a train batch."""
+    if cfg.frontend:
+        return {"embeds": ("batch", None, None), "labels": ("batch", None)}
+    return {"tokens": ("batch", None), "labels": ("batch", None)}
+
+
+def train_batch_shapes(cfg: ModelConfig, run: RunConfig):
+    b, s = run.shape.global_batch, run.shape.seq_len
+    if cfg.frontend:
+        return {"embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                               jnp.bfloat16),
+                "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    return {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+
+
+# -- serve: prefill ---------------------------------------------------------------
+
+def make_prefill_step(cfg: ModelConfig, run: RunConfig, rules: Rules):
+    def prefill_step(params, batch, cache):
+        logits, new_cache, _ = lm.forward(
+            params, cfg, tokens=batch.get("tokens"),
+            embeds=batch.get("embeds"), cache=cache, rules=rules,
+            remat="none", chunk_q=run.attn_chunk_q,
+            chunk_kv=run.attn_chunk_kv, logits_last_only=True)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, new_cache
+    return prefill_step
+
+
+# -- serve: decode ----------------------------------------------------------------
+
+def make_decode_step(cfg: ModelConfig, run: RunConfig, rules: Rules):
+    def decode_step(params, tokens, cache, cache_pos):
+        """tokens: (B,1) int32 — current token; cache_pos: () int32 = number
+        of tokens so far including this one. Returns (next_tok, new_cache)."""
+        logits, new_cache, _ = lm.forward(
+            params, cfg, tokens=tokens, cache=cache, cache_pos=cache_pos,
+            rules=rules, remat="none")
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, new_cache
+    return decode_step
+
+
+def serve_batch_shapes(cfg: ModelConfig, run: RunConfig, *, decode: bool):
+    b, s = run.shape.global_batch, run.shape.seq_len
+    if decode:
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+    if cfg.frontend:
+        return {"embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                               jnp.bfloat16)}
+    return {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+
+
+def serve_batch_spec(cfg: ModelConfig, *, decode: bool):
+    if decode:
+        return {"tokens": ("batch", None)}
+    if cfg.frontend:
+        return {"embeds": ("batch", None, None)}
+    return {"tokens": ("batch", None)}
+
+
+def cache_shapes(cfg: ModelConfig, run: RunConfig, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct tree for the cache (no allocation)."""
+    return jax.eval_shape(
+        lambda: lm.cache_init(cfg, run.shape.global_batch,
+                              run.shape.seq_len, dtype))

@@ -1,0 +1,81 @@
+"""Matcher correctness: edit distance vs host DP oracle (hypothesis),
+Jaccard, cascade skip semantics (paper §5.1 optimization)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import match as M
+
+
+@given(la=st.integers(0, 16), lb=st.integers(0, 16),
+       seed=st.integers(0, 100000), alpha=st.integers(2, 6))
+@settings(max_examples=60, deadline=None)
+def test_edit_distance_matches_oracle(la, lb, seed, alpha):
+    rng = np.random.default_rng(seed)
+    L = 16
+    a = np.zeros(L, np.uint8)
+    b = np.zeros(L, np.uint8)
+    a[:la] = rng.integers(97, 97 + alpha, la)
+    b[:lb] = rng.integers(97, 97 + alpha, lb)
+    want = M.edit_distance_ref(a, b)
+    got = int(M.edit_distance_impl(jnp.asarray(a)[None],
+                                   jnp.asarray(b)[None])[0])
+    assert got == want
+
+
+def test_edit_distance_batch():
+    rng = np.random.default_rng(1)
+    A = rng.integers(97, 103, (128, 24)).astype(np.uint8)
+    B = rng.integers(97, 103, (128, 24)).astype(np.uint8)
+    got = np.asarray(M.edit_distance_impl(jnp.asarray(A), jnp.asarray(B)))
+    want = np.array([M.edit_distance_ref(A[i], B[i]) for i in range(128)])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_jaccard_known_values():
+    a = jnp.asarray([[0b1111, 0]], jnp.uint32)
+    b = jnp.asarray([[0b0011, 0]], jnp.uint32)
+    assert float(M.jaccard_sig(a, b)[0]) == pytest.approx(0.5)
+    assert float(M.jaccard_sig(a, a)[0]) == pytest.approx(1.0)
+    z = jnp.zeros((1, 2), jnp.uint32)
+    assert float(M.jaccard_sig(z, z)[0]) == pytest.approx(1.0)  # empty sets
+
+
+def test_cosine_range_and_identity():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(32, 16)).astype(np.float32)
+    x /= np.linalg.norm(x, axis=1, keepdims=True)
+    xj = jnp.asarray(x)
+    s_ii = M.cosine_sim(xj, xj)
+    np.testing.assert_allclose(np.asarray(s_ii), 1.0, atol=1e-5)
+    s = M.cosine_sim(xj, jnp.roll(xj, 1, axis=0))
+    assert ((np.asarray(s) >= 0) & (np.asarray(s) <= 1)).all()
+
+
+def test_cascade_skip_semantics():
+    """The skip optimization must never change which pairs match: a skipped
+    matcher only occurs when the threshold is already unreachable."""
+    rng = np.random.default_rng(2)
+    n = 256
+    feat = rng.normal(size=(n, 8)).astype(np.float32)
+    feat /= np.linalg.norm(feat, axis=1, keepdims=True)
+    sig = rng.integers(0, 2**32, size=(n, 4), dtype=np.uint64) \
+        .astype(np.uint32)
+    pa = {"feat": jnp.asarray(feat), "sig": jnp.asarray(sig)}
+    pb = {"feat": jnp.asarray(np.roll(feat, 1, 0)),
+          "sig": jnp.asarray(np.roll(sig, 1, 0))}
+    mm = M.default_matcher()
+    with_skip = np.asarray(mm.matches(pa, pb, skip=True))
+    without = np.asarray(mm.matches(pa, pb, skip=False))
+    np.testing.assert_array_equal(with_skip, without)
+    # and the skip actually skips work for sub-threshold cheap scores
+    _, evaluated = mm.combined(pa, pb, skip=True)
+    assert float(np.asarray(evaluated).mean()) < 2.0
+
+
+def test_cascade_order_by_cost():
+    mm = M.CascadeMatcher(matchers=(
+        M.Matcher(field="a", kind="cosine", cost=5.0),
+        M.Matcher(field="b", kind="cosine", cost=1.0)), threshold=0.5)
+    assert [m.field for m in mm.ordered()] == ["b", "a"]
