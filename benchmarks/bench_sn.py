@@ -26,8 +26,9 @@ def _setup(n, n_keys, seed=0, skew=0.0):
 
 def _time_pipeline(ents, mesh, bounds, cfg, reps=3):
     import jax
-    from repro.core import pipeline as PL
-    run = lambda: PL.run_shard_map(ents, mesh, "data", bounds, cfg)
+    from repro.api import ShardMapRunner
+    runner = ShardMapRunner(mesh=mesh, axis="data")
+    run = lambda: runner.run_raw(ents, bounds, cfg)
     out = run()                              # compile + warm
     jax.block_until_ready(out["main"]["match"])
     t0 = time.perf_counter()
@@ -45,14 +46,14 @@ def scalability_body(n: int = 100_000, w: int = 10, n_keys: int = 4096,
                      variant: str = "repsn", reps: int = 3) -> dict:
     """Wall time of blocking+matching at r = #devices shards (paper Fig. 8)."""
     import jax
+    from repro.api import ERConfig
     from repro.core import partition as P
-    from repro.core.pipeline import SNConfig
     r = len(jax.devices())
-    mesh = jax.make_mesh((r,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = jax.make_mesh((r,), ("data",))
     ents = _setup(n, n_keys)
     bounds = P.balanced_partition(np.asarray(ents["key"]), r)
-    cfg = SNConfig(window=w, variant=variant, cap_factor=3.0)
+    cfg = ERConfig(window=w, variant=variant, cap_factor=3.0,
+                   runner="shard_map")
     dt, n_pairs, out = _time_pipeline(ents, mesh, bounds, cfg, reps)
     # critical-path model: parallel time ~ max per-shard window work.  This
     # container exposes ONE physical core, so the r "devices" timeshare it
@@ -75,11 +76,10 @@ def skew_body(n: int = 60_000, w: int = 20, n_keys: int = 4096,
     strategy: manual | even10->even mapped onto r | even8_40/55/70/85
     (hot_frac of entities forced into the last partition)."""
     import jax
+    from repro.api import ERConfig
     from repro.core import partition as P
-    from repro.core.pipeline import SNConfig
     r = len(jax.devices())
-    mesh = jax.make_mesh((r,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = jax.make_mesh((r,), ("data",))
     hot = 0.0
     if strategy.startswith("even") and "_" in strategy:
         hot = int(strategy.split("_")[1]) / 100.0
@@ -93,7 +93,8 @@ def skew_body(n: int = 60_000, w: int = 20, n_keys: int = 4096,
         bounds = P.range_partition(n_keys, r)
     sizes = np.asarray(P.partition_sizes(bounds, ents["key"], r=r))
     g = P.gini(sizes)
-    cfg = SNConfig(window=w, variant="repsn", cap_factor=3.0)
+    cfg = ERConfig(window=w, variant="repsn", cap_factor=3.0,
+                   runner="shard_map")
     dt, n_pairs, _ = _time_pipeline(ents, mesh, bounds, cfg, reps)
     return {"strategy": strategy, "r": r, "gini": round(g, 3),
             "seconds": dt, "max_load": int(sizes.max()),
@@ -104,23 +105,23 @@ def jobsn_vs_repsn_body(n: int = 60_000, w: int = 50, n_keys: int = 4096,
                         reps: int = 3) -> dict:
     """Variant comparison (paper §5.2) + collective op counts from HLO."""
     import jax
+    from repro.api import ERConfig, ShardMapRunner
     from repro.core import partition as P
-    from repro.core import pipeline as PL
-    from repro.core.pipeline import SNConfig
     from repro.perf import hlo_analysis
     r = len(jax.devices())
-    mesh = jax.make_mesh((r,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = jax.make_mesh((r,), ("data",))
     ents = _setup(n, n_keys)
     bounds = P.balanced_partition(np.asarray(ents["key"]), r)
     out = {}
     for variant in ["srp", "repsn", "jobsn"]:
-        cfg = SNConfig(window=w, variant=variant, cap_factor=3.0)
+        cfg = ERConfig(window=w, variant=variant, cap_factor=3.0,
+                       runner="shard_map")
         dt, n_pairs, _ = _time_pipeline(ents, mesh, bounds, cfg, reps)
         # collective profile of the compiled pipeline
         import jax as _jax
+        runner = ShardMapRunner(mesh=mesh, axis="data")
         lowered = _jax.jit(
-            lambda e: PL.run_shard_map(e, mesh, "data", bounds, cfg)
+            lambda e: runner.run_raw(e, bounds, cfg)
         ).lower(ents)
         an = hlo_analysis.analyze(lowered.compile().as_text())
         out[variant] = {

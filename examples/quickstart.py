@@ -1,18 +1,18 @@
-"""Quickstart: parallel Sorted Neighborhood blocking in 60 seconds.
+"""Quickstart: parallel Sorted Neighborhood entity resolution in 60 seconds.
 
-Generates a synthetic publication-like corpus, runs the three MapReduce-style
-SN variants (SRP / RepSN / JobSN) over 8 vmapped shards, and checks the
-results against the sequential oracle — the paper's §4 in miniature.
+One facade — ``repro.api.resolve`` — runs the paper's three MapReduce-style
+SN variants (SRP / RepSN / JobSN) on any registered runner and returns typed
+results with blocking-quality metrics computed against the sequential
+oracle.  A second call, ``repro.api.link``, does dual-source (R x S) record
+linkage with the same machinery.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
+from repro import api
 from repro.core import entities as E
-from repro.core import partition as P
-from repro.core import pipeline as PL
 from repro.core import sn
-from repro.core.pipeline import SNConfig
 
 
 def main():
@@ -22,28 +22,48 @@ def main():
 
     ents = E.synth_entities(rng, n, n_keys=n_keys, dup_frac=0.25)
     keys, eids = np.asarray(ents["key"]), np.asarray(ents["eid"])
-    bounds = P.balanced_partition(keys, r)
-    sizes = np.asarray(P.partition_sizes(bounds, ents["key"], r=r))
-    print(f"partition sizes: {sizes.tolist()}  (gini={P.gini(sizes):.3f})")
-
     oracle = sn.sequential_sn_pairs(keys, eids, w)
     print(f"sequential SN pairs: {len(oracle)} "
           f"(closed form: {sn.expected_pair_count(n, w)})")
 
+    # -- one config, three variants, typed results --------------------------------
+    base = api.ERConfig(window=w, runner="vmap", num_shards=r,
+                        partitioner="balanced", compute_metrics=True)
+    print(f"\nvariants ({', '.join(api.available_variants())} are "
+          f"registered; runner={base.runner}):")
     for variant in ["srp", "repsn", "jobsn"]:
-        out = PL.run_vmap(ents, r, bounds, SNConfig(window=w,
-                                                    variant=variant))
-        blocked = PL.blocked_pairs(out)
-        matched = PL.result_pairs(out)
-        missing = len(oracle - blocked)
+        res = api.resolve(ents, base.with_(variant=variant))
+        b = res.blocking
         note = ""
         if variant == "srp":
             note = (f"  <- misses exactly (r-1)*w*(w-1)/2 = "
                     f"{sn.srp_missed_boundary_pairs(r, w)} boundary pairs")
-        print(f"{variant:6s}: blocked={len(blocked)} matched={len(matched)} "
-              f"missing={missing}{note}")
+        print(f"  {variant:6s}: blocked={len(b.pairs)} "
+              f"matched={len(res.matches)} "
+              f"completeness={res.metrics.pairs_completeness:.4f} "
+              f"reduction={res.metrics.reduction_ratio:.4f} "
+              f"max_load={b.max_load}{note}")
 
-    print("\nRepSN/JobSN == sequential SN: the paper's §4 claims, verified.")
+    # -- same config, sequential oracle runner: must agree exactly ----------------
+    seq = api.resolve(ents, base.with_(variant="repsn", runner="sequential"))
+    par = api.resolve(ents, base.with_(variant="repsn"))
+    assert seq.blocking.pairs == par.blocking.pairs
+    assert seq.matches == par.matches
+    print("\nRepSN (vmap) == sequential oracle: the paper's §4 claim, "
+          "verified through one facade.")
+
+    # -- dual-source linkage: R x S, cross-source pairs only ----------------------
+    take = rng.permutation(n)[: n // 4]
+    rhs = E.make_entities(
+        np.asarray(ents["key"])[take],
+        np.arange(len(take), dtype=np.int32),
+        payload={k: np.asarray(v)[take]
+                 for k, v in ents["payload"].items()})
+    linked = api.link(ents, rhs, base.with_(variant="repsn", hops=r - 1))
+    print(f"\ndual-source linkage R({n}) x S({len(take)}): "
+          f"blocked={len(linked.blocking.pairs)} "
+          f"matched={len(linked.matches)} (all cross-source, "
+          f"completeness={linked.metrics.pairs_completeness:.4f})")
 
 
 if __name__ == "__main__":

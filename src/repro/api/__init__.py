@@ -1,0 +1,46 @@
+"""``repro.api`` — the public entity-resolution facade.
+
+One entry point for the paper's parallel Sorted Neighborhood workflows:
+
+    from repro import api
+
+    res = api.resolve(ents, api.ERConfig(variant="repsn", runner="vmap",
+                                         num_shards=8, window=10))
+    res.blocking.pairs      # frozenset of blocked (candidate) pairs
+    res.matches             # frozenset of matcher-accepted pairs
+    res.blocking.load       # per-shard valid counts (skew telemetry)
+    res.metrics             # reduction ratio / pairs completeness vs oracle
+
+Pieces (each importable on its own):
+
+  * config.ERConfig        frozen run configuration (variant, runner, window,
+                           partitioner, capacity, matcher, linkage mode)
+  * variants               registry of SN variants (srp | repsn | jobsn);
+                           ``@register_variant`` adds new ones without
+                           touching any dispatch code
+  * runners                Runner protocol + SequentialRunner / VmapRunner /
+                           ShardMapRunner
+  * results                typed BlockingResult / ERResult / ERMetrics
+  * linkage                dual-source (R x S) record linkage: source tags,
+                           cross-source band masks, host oracle
+  * facade.resolve/link    glue the above together
+"""
+from repro.api.config import ERConfig
+from repro.api.facade import default_bounds, link, make_runner, resolve
+from repro.api.linkage import sequential_link_pairs, tag_sources
+from repro.api.results import (BlockingResult, ERMetrics, ERResult,
+                               pairs_from_band)
+from repro.api.runners import (Runner, RunnerOutcome, SequentialRunner,
+                               ShardMapRunner, VmapRunner, shard_input)
+from repro.api.variants import (available_variants, get_variant,
+                                register_variant)
+
+__all__ = [
+    "ERConfig",
+    "resolve", "link", "make_runner", "default_bounds",
+    "BlockingResult", "ERResult", "ERMetrics", "pairs_from_band",
+    "Runner", "RunnerOutcome",
+    "SequentialRunner", "VmapRunner", "ShardMapRunner", "shard_input",
+    "register_variant", "get_variant", "available_variants",
+    "tag_sources", "sequential_link_pairs",
+]

@@ -1,0 +1,85 @@
+"""ERConfig — the single frozen configuration for an entity-resolution run.
+
+Absorbs the old ``pipeline.SNConfig`` (window / variant / hops / capacity /
+matcher) and adds the execution choices that used to live in free-function
+signatures: which runner executes the shard program, how many shards, how
+boundaries are derived, and whether the run is dual-source linkage.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+
+from repro.core.match import CascadeMatcher, default_matcher
+
+VARIANTS = ("srp", "repsn", "jobsn")
+RUNNERS = ("sequential", "vmap", "shard_map")
+PARTITIONERS = ("balanced", "range", "sample")
+
+
+@dataclass(frozen=True)
+class ERConfig:
+    """Frozen configuration for ``repro.api.resolve``.
+
+    Blocking / matching (paper §4):
+      window       SN window size w (pairs at sorted distance 1..w-1)
+      variant      registered variant name: "srp" | "repsn" | "jobsn"
+      hops         RepSN halo hops (1 = paper; r-1 = complete for any skew)
+      cap_factor   shuffle link capacity = cap0 * cap_factor / r; 0 -> cap0
+                   (never overflows)
+      matcher      cascade match strategy (paper §5.1 skip optimization)
+      return_scores  keep band scores in raw runner output
+
+    Execution:
+      runner       "sequential" (host oracle) | "vmap" (single device,
+                   named-axis shards) | "shard_map" (real device mesh)
+      num_shards   r for sequential/vmap runners (shard_map takes r from
+                   its mesh axis)
+      partitioner  how default boundaries are derived from the data:
+                   "balanced" | "range" | "sample" (explicit ``bounds``
+                   passed to resolve() always win)
+
+    Scenario:
+      linkage          dual-source R x S mode: only cross-source pairs are
+                       blocked/matched (entities carry a "src" payload tag)
+      compute_metrics  run the host oracle and attach reduction-ratio /
+                       pairs-completeness metrics to the result
+    """
+    window: int = 10
+    variant: str = "repsn"
+    hops: int = 1
+    cap_factor: float = 0.0
+    matcher: CascadeMatcher = field(default_factory=default_matcher)
+    return_scores: bool = False
+
+    runner: str = "vmap"
+    num_shards: int = 8
+    partitioner: str = "balanced"
+
+    linkage: bool = False
+    compute_metrics: bool = False
+
+    def __post_init__(self):
+        if self.window < 2:
+            raise ValueError(f"window must be >= 2, got {self.window}")
+        if self.runner not in RUNNERS:
+            raise ValueError(f"unknown runner {self.runner!r}; "
+                             f"choose from {RUNNERS}")
+        if self.partitioner not in PARTITIONERS:
+            raise ValueError(f"unknown partitioner {self.partitioner!r}; "
+                             f"choose from {PARTITIONERS}")
+        if self.num_shards < 1:
+            raise ValueError(f"num_shards must be >= 1, got {self.num_shards}")
+        # variant names are validated lazily by the registry (so configs can
+        # be built before a plugin variant registers itself)
+
+    def with_(self, **kw) -> "ERConfig":
+        """Functional update (dataclasses.replace sugar)."""
+        return replace(self, **kw)
+
+    @classmethod
+    def from_sn_config(cls, sn_cfg, **kw) -> "ERConfig":
+        """Lift an old ``pipeline.SNConfig`` into an ERConfig."""
+        return cls(window=sn_cfg.window, variant=sn_cfg.variant,
+                   hops=sn_cfg.hops, cap_factor=sn_cfg.cap_factor,
+                   matcher=sn_cfg.matcher,
+                   return_scores=sn_cfg.return_scores, **kw)

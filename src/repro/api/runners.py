@@ -1,0 +1,205 @@
+"""Pluggable runners — who executes the variant's shard program.
+
+  * SequentialRunner  host numpy, wraps the ``sn.py`` oracle with the chosen
+                      variant's SEMANTICS (srp: per-partition windows;
+                      repsn/jobsn: the complete SN pair set) — the reference
+                      every parallel run is checked against
+  * VmapRunner        single device, r shards on a vmapped named axis
+                      (property tests, skew studies)
+  * ShardMapRunner    real devices: shards live on a mesh axis (multi-CPU
+                      subprocess / TPU mesh)
+
+All three satisfy the ``Runner`` protocol: ``resolve(ents, bounds, cfg)``
+returns a ``RunnerOutcome`` with identical semantics, so callers (and the
+facade) never branch on the execution substrate.  The device runners also
+expose ``run_raw`` returning the stacked per-shard output dict (band masks,
+halos, scores) for benchmarks and invariant tests.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, FrozenSet, NamedTuple, Protocol, Tuple, \
+    runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api import linkage as LK
+from repro.api.variants import get_variant
+from repro.core import entities as E
+
+Pair = Tuple[int, int]
+
+
+class RunnerOutcome(NamedTuple):
+    """What every runner returns: host pair sets + accounting."""
+    blocked: FrozenSet[Pair]
+    matched: FrozenSet[Pair]
+    load: Tuple[int, ...]
+    overflow: int
+    num_shards: int
+
+
+@runtime_checkable
+class Runner(Protocol):
+    name: str
+
+    @property
+    def shards(self) -> int: ...
+
+    def resolve(self, ents: dict, bounds, cfg) -> RunnerOutcome: ...
+
+
+def shard_input(ents: dict, r: int) -> dict:
+    """Round-robin split into r mapper shards (paper: mappers scan disjoint
+    input partitions), padded to equal capacity."""
+    n = ents["key"].shape[0]
+    cap0 = int(np.ceil(n / r))
+    pad = r * cap0 - n
+    padded = E.concat(ents, E.empty_like(ents, pad)) if pad else ents
+    return jax.tree.map(
+        lambda x: x.reshape((r, cap0) + x.shape[1:]), padded)
+
+
+def _device_outcome(out: dict, cfg, r: int) -> RunnerOutcome:
+    col = get_variant(cfg.variant).collect(out)
+    load = tuple(int(x) for x in np.asarray(out["load"])[0])
+    overflow = int(np.asarray(out["overflow"])[0])
+    return RunnerOutcome(blocked=col.blocked, matched=col.matched,
+                         load=load, overflow=overflow, num_shards=r)
+
+
+@dataclass(frozen=True)
+class VmapRunner:
+    """r shards on one device via ``jax.vmap(axis_name=...)``."""
+    num_shards: int = 8
+    name = "vmap"
+
+    @property
+    def shards(self) -> int:
+        return self.num_shards
+
+    def run_raw(self, ents: dict, bounds, cfg) -> dict:
+        r = self.num_shards
+        variant = get_variant(cfg.variant)
+        fn = partial(variant.shard_program,
+                     bounds=jnp.asarray(bounds, jnp.int32), r=r, axis="sn",
+                     cfg=cfg)
+        return jax.vmap(fn, axis_name="sn")(shard_input(ents, r))
+
+    def resolve(self, ents: dict, bounds, cfg) -> RunnerOutcome:
+        return _device_outcome(self.run_raw(ents, bounds, cfg), cfg,
+                               self.num_shards)
+
+
+@dataclass(frozen=True)
+class ShardMapRunner:
+    """Real devices: shards live on mesh axis ``axis``.  Output arrays carry
+    a leading per-shard dim, exactly like VmapRunner."""
+    mesh: Any = None                 # jax Mesh; None -> all devices, 1-D
+    axis: str = "data"
+    name = "shard_map"
+
+    def __post_init__(self):
+        if self.mesh is None:
+            from repro.launch.mesh import make_mesh_compat
+            object.__setattr__(self, "mesh", make_mesh_compat(
+                (len(jax.devices()),), (self.axis,)))
+
+    @property
+    def shards(self) -> int:
+        return int(self.mesh.shape[self.axis])
+
+    def run_raw(self, ents: dict, bounds, cfg) -> dict:
+        import warnings
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        mesh, axis = self.mesh, self.axis
+        r = int(mesh.shape[axis])
+        variant = get_variant(cfg.variant)
+        stacked = shard_input(ents, r)
+        fn = partial(variant.shard_program,
+                     bounds=jnp.asarray(bounds, jnp.int32), r=r, axis=axis,
+                     cfg=cfg)
+
+        def body(stacked_local):
+            # stacked_local: (1, cap0, ...) — this shard's mapper partition
+            local = jax.tree.map(lambda x: x[0], stacked_local)
+            out = fn(local)
+            return jax.tree.map(lambda x: jnp.expand_dims(x, 0), out)
+
+        # out_specs from an abstract vmap pass (vmap binds the axis name so
+        # the collectives trace; eval_shape alone hits "unbound axis name")
+        out_sds = jax.eval_shape(
+            lambda st: jax.vmap(lambda l: fn(l), axis_name=axis)(st), stacked)
+        out_specs = jax.tree.map(lambda _: P(axis), out_sds)
+        return shard_map(body, mesh=mesh,
+                         in_specs=(jax.tree.map(lambda _: P(axis), stacked),),
+                         out_specs=out_specs, check_rep=False)(stacked)
+
+    def resolve(self, ents: dict, bounds, cfg) -> RunnerOutcome:
+        return _device_outcome(self.run_raw(ents, bounds, cfg), cfg,
+                               self.shards)
+
+
+@dataclass(frozen=True)
+class SequentialRunner:
+    """Host oracle: variant-faithful sequential blocking + batched matching.
+    ``load`` reports per-PARTITION sizes (what each reducer would hold)."""
+    num_shards: int = 1
+    name = "sequential"
+    match_chunk: int = 1 << 16
+
+    @property
+    def shards(self) -> int:
+        return self.num_shards
+
+    def resolve(self, ents: dict, bounds, cfg) -> RunnerOutcome:
+        bounds = np.asarray(bounds)
+        r = int(bounds.shape[0]) + 1
+        valid = np.asarray(ents["valid"])
+        keys = np.asarray(ents["key"])[valid]
+        eids = np.asarray(ents["eid"])[valid]
+
+        blocked = get_variant(cfg.variant).sequential_pairs(
+            keys, eids, bounds, cfg.window)
+        if getattr(cfg, "linkage", False) and "src" in ents["payload"]:
+            src = np.asarray(ents["payload"]["src"])[valid]
+            blocked = LK.filter_cross_source(blocked, eids, src)
+        matched = self._match(ents, blocked, cfg)
+
+        part = np.searchsorted(bounds, keys, side="left")
+        load = tuple(np.bincount(part, minlength=r).astype(int).tolist())
+        return RunnerOutcome(blocked=frozenset(blocked), matched=matched,
+                             load=load, overflow=0, num_shards=r)
+
+    def _match(self, ents: dict, blocked, cfg) -> FrozenSet[Pair]:
+        """Batch-score blocked pairs with the cascade matcher (skip=False:
+        identical accept/reject decisions, exact scores)."""
+        if not blocked:
+            return frozenset()
+        valid = np.asarray(ents["valid"])
+        rows = np.nonzero(valid)[0]
+        eids = np.asarray(ents["eid"])[rows]
+        order = np.argsort(eids)
+        sorted_eids, sorted_rows = eids[order], rows[order]
+        pairs = np.asarray(sorted(blocked), dtype=np.int64)     # (P, 2)
+        ra = sorted_rows[np.searchsorted(sorted_eids, pairs[:, 0])]
+        rb = sorted_rows[np.searchsorted(sorted_eids, pairs[:, 1])]
+        payload = {k: np.asarray(v) for k, v in ents["payload"].items()}
+
+        matched = set()
+        for s in range(0, len(pairs), self.match_chunk):
+            ia, ib = ra[s:s + self.match_chunk], rb[s:s + self.match_chunk]
+            pa = {k: jnp.asarray(v[ia]) for k, v in payload.items()}
+            pb = {k: jnp.asarray(v[ib]) for k, v in payload.items()}
+            score, _ = cfg.matcher.combined(pa, pb, skip=False)
+            ok = np.asarray(score >= cfg.matcher.threshold)
+            matched.update(
+                map(tuple, pairs[s:s + self.match_chunk][ok].tolist()))
+        return frozenset(matched)

@@ -1,0 +1,163 @@
+"""Variant registry — the SN strategies behind ``repro.api.resolve``.
+
+Each variant owns three hooks:
+
+  * ``shard_program(ents, bounds, r, axis, cfg)``  the per-shard collective
+    program (runs under vmap-with-axis-name or shard_map); returns a dict of
+    per-shard outputs with at least ``overflow``, ``load`` and one or more
+    band parts (``main``, optionally ``boundary``)
+  * ``collect(out)``  turn the stacked runner output into host pair sets
+    (blocked + matched), deduplicating across parts
+  * ``sequential_pairs(keys, eids, bounds, w)``  the HOST oracle with this
+    variant's semantics (SRP: per-partition windows — boundary pairs are
+    missed by design; RepSN/JobSN: the complete sequential SN pair set)
+
+New variants register with ``@register_variant("name")`` — no dispatch code
+anywhere else changes (this replaces the old if/elif in pipeline.sn_shard).
+"""
+from __future__ import annotations
+
+from typing import Dict, Set, Tuple, Type
+
+import jax
+import numpy as np
+
+from repro.core import jobsn as J
+from repro.core import repsn as R
+from repro.core import sn
+from repro.core import srp as S
+from repro.core import window as W
+from repro.api import linkage as LK
+from repro.api import results as RES
+
+_REGISTRY: Dict[str, Type["VariantBase"]] = {}
+
+
+def register_variant(name: str):
+    """Class decorator: ``@register_variant("repsn")``."""
+    def deco(cls):
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def get_variant(name: str) -> "VariantBase":
+    try:
+        return _REGISTRY[name]()
+    except KeyError:
+        raise ValueError(f"unknown SN variant {name!r}; registered: "
+                         f"{available_variants()}") from None
+
+
+def available_variants() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+class VariantBase:
+    """Shared SRP front-end + band evaluation; subclasses add the variant's
+    boundary-handling step."""
+
+    name = "?"
+    parts: Tuple[str, ...] = ("main",)
+    halo_slices = False        # True: slices w-1 boundary slots per shard
+    boundary_complete = True   # sequential_pairs == full SN oracle
+
+    # -- device side ---------------------------------------------------------
+
+    def shard_program(self, ents: dict, bounds: jax.Array, r: int,
+                      axis: str, cfg) -> dict:
+        cap0 = ents["key"].shape[0]
+        cap_link = cap0 if cfg.cap_factor <= 0 else \
+            max(1, int(np.ceil(cap0 * cfg.cap_factor / r)))
+        if self.halo_slices and cfg.window - 1 > r * cap_link:
+            raise ValueError(
+                f"variant {self.name!r} slices w-1 boundary slots per "
+                f"shard, but window={cfg.window} exceeds the per-shard "
+                f"buffer of {r * cap_link} slots; reduce window or "
+                f"num_shards, raise cap_factor, or use runner='sequential'")
+        sorted_ents, overflow = S.srp_shard(ents, bounds, r, axis, cap_link)
+        out = {"overflow": overflow, "load": S.local_load(sorted_ents, axis)}
+        out.update(self._windows(sorted_ents, r, axis, cfg))
+        return out
+
+    def _windows(self, sorted_ents: dict, r: int, axis: str, cfg) -> dict:
+        raise NotImplementedError
+
+    def _band(self, e: dict, halo_len: int, mode: str, cfg) -> dict:
+        scores, mask = W.band_scores(e, cfg.window, cfg.matcher,
+                                     halo_len=halo_len, mode=mode)
+        if getattr(cfg, "linkage", False) and "src" in e["payload"]:
+            mask = mask & LK.cross_source_band(e["payload"]["src"],
+                                               cfg.window)
+        match = (scores >= cfg.matcher.threshold) & mask
+        out = {"ents": e, "halo_len": halo_len, "mask": mask, "match": match}
+        if cfg.return_scores:
+            out["scores"] = scores
+        return out
+
+    # -- host side -----------------------------------------------------------
+
+    def collect(self, out: dict) -> RES.CollectedPairs:
+        """Stacked runner output -> deduplicated host pair sets.  Parts are
+        unioned, so a pair emitted by several parts/shards counts once."""
+        blocked: Set[Tuple[int, int]] = set()
+        matched: Set[Tuple[int, int]] = set()
+        for p in self.parts:
+            if p in out:
+                blocked |= RES.pairs_from_band(out[p], "mask")
+                matched |= RES.pairs_from_band(out[p], "match")
+        return RES.CollectedPairs(blocked=frozenset(blocked),
+                                  matched=frozenset(matched))
+
+    def sequential_pairs(self, keys: np.ndarray, eids: np.ndarray,
+                         bounds: np.ndarray, w: int) -> Set[Tuple[int, int]]:
+        """Host oracle with this variant's semantics (boundary-complete
+        variants return the full sequential SN pair set)."""
+        return sn.sequential_sn_pairs(keys, eids, w)
+
+
+@register_variant("srp")
+class SrpVariant(VariantBase):
+    """Plain Sorted Reduce Partitions (paper §4.1): window within each
+    partition only; misses (r-1)*w*(w-1)/2 boundary pairs by design."""
+
+    boundary_complete = False
+
+    def _windows(self, sorted_ents, r, axis, cfg):
+        return {"main": self._band(sorted_ents, 0, "all", cfg)}
+
+    def sequential_pairs(self, keys, eids, bounds, w):
+        part = np.searchsorted(np.asarray(bounds), keys, side="left")
+        pairs: Set[Tuple[int, int]] = set()
+        for p in np.unique(part):
+            sel = part == p
+            pairs |= sn.sequential_sn_pairs(keys[sel], eids[sel], w)
+        return pairs
+
+
+@register_variant("repsn")
+class RepSNVariant(VariantBase):
+    """SN with replication (paper §4.3): halo-prepend the predecessor's last
+    w-1 entities, then window with mode="native"."""
+
+    halo_slices = True
+
+    def _windows(self, sorted_ents, r, axis, cfg):
+        combined, hl = R.repsn_combine(sorted_ents, cfg.window, r, axis,
+                                       hops=cfg.hops)
+        return {"main": self._band(combined, hl, "native", cfg)}
+
+
+@register_variant("jobsn")
+class JobSNVariant(VariantBase):
+    """SN with an additional phase (paper §4.2): plain SRP window plus a
+    boundary-group pass restricted to cross-boundary pairs."""
+
+    parts = ("main", "boundary")
+    halo_slices = True
+
+    def _windows(self, sorted_ents, r, axis, cfg):
+        group, hl = J.boundary_group(sorted_ents, cfg.window, r, axis)
+        return {"main": self._band(sorted_ents, 0, "all", cfg),
+                "boundary": self._band(group, hl, "cross", cfg)}

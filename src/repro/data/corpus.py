@@ -19,8 +19,6 @@ import numpy as np
 from repro.core import entities as E
 from repro.core import keys as K
 from repro.core import partition as P
-from repro.core import pipeline as PL
-from repro.core.pipeline import SNConfig
 
 
 # -- synthetic document corpus -----------------------------------------------------
@@ -80,6 +78,7 @@ def dedup_corpus(docs: np.ndarray, *, r: int = 4, window: int = 10,
                  balance: bool = True) -> DedupResult:
     """The paper's workflow as a corpus-dedup stage.  Keeps the lowest-eid
     member of every matched pair (union-find-free greedy: drop the higher)."""
+    from repro import api
     ents = doc_entities(docs)
     keys_np = np.asarray(ents["key"])
     bounds = P.balanced_partition(keys_np, r) if balance else \
@@ -87,17 +86,17 @@ def dedup_corpus(docs: np.ndarray, *, r: int = 4, window: int = 10,
     from dataclasses import replace
     from repro.core.match import default_matcher
     matcher = replace(default_matcher(), threshold=threshold)
-    cfg = SNConfig(window=window, variant=variant, matcher=matcher)
-    out = PL.run_vmap(ents, r, bounds, cfg)
-    pairs = PL.result_pairs(out)
+    cfg = api.ERConfig(window=window, variant=variant, matcher=matcher,
+                       runner="vmap", num_shards=r)
+    res = api.resolve(ents, cfg, bounds=bounds)
     keep = np.ones(docs.shape[0], bool)
-    for a, b in sorted(pairs):
+    for a, b in sorted(res.matches):
         if keep[a]:
             keep[b] = False
     sizes = np.asarray(P.partition_sizes(bounds, ents["key"], r=r))
-    return DedupResult(keep=keep, n_pairs=len(pairs),
+    return DedupResult(keep=keep, n_pairs=len(res.matches),
                        n_dropped=int((~keep).sum()),
-                       gini=P.gini(sizes), overflow=int(out["overflow"][0]))
+                       gini=P.gini(sizes), overflow=res.blocking.overflow)
 
 
 # -- deterministic token batcher ----------------------------------------------------

@@ -84,7 +84,6 @@ def _local_moe(x, wg, w_gate, w_up, w_down, *, cfg, mesh_axes, fsdp: bool,
     e = cfg.moe
     n_loc, d = x.shape
     model_ax = "model"
-    n_model = jax.lax.axis_size(model_ax)
     my_rank = jax.lax.axis_index(model_ax)
     data_axes = tuple(a for a in ("pod", "data") if a in mesh_axes)
 

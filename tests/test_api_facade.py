@@ -1,0 +1,250 @@
+"""The ``repro.api`` facade contract.
+
+  * resolve() returns identical blocked AND matched pair sets for every
+    (variant in {srp, repsn, jobsn}) x (runner in {sequential, vmap}) combo
+    (shard_map is covered on real devices in test_distributed_cpu.py, and
+    in-process on a 1-device mesh here)
+  * JobSN boundary dedup: main and boundary passes never double-count a pair
+  * cap_factor overflow accounting (srp_shard's counts survive the facade)
+  * dual-source linkage emits only cross-source pairs == the linkage oracle
+  * the variant registry is open (custom variants) and validating
+  * old core.pipeline entry points still work via deprecation shims
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import entities as E
+from repro.core import partition as P
+from repro.core import sn
+
+N, R, W, NK = 260, 4, 6, 64
+
+
+@pytest.fixture(scope="module")
+def ents():
+    return E.synth_entities(np.random.default_rng(11), N, n_keys=NK,
+                            dup_frac=0.25)
+
+
+@pytest.fixture(scope="module")
+def bounds(ents):
+    return P.balanced_partition(np.asarray(ents["key"]), R)
+
+
+@pytest.mark.parametrize("variant", ["srp", "repsn", "jobsn"])
+def test_runners_agree_with_sequential_oracle(ents, bounds, variant):
+    """Acceptance: every runner reproduces the sequential oracle's pair sets
+    under the variant's semantics (srp: per-partition; others: complete)."""
+    cfg = api.ERConfig(window=W, variant=variant, runner="sequential",
+                       num_shards=R, hops=R - 1)
+    seq = api.resolve(ents, cfg, bounds=bounds)
+    res = api.resolve(ents, cfg.with_(runner="vmap"), bounds=bounds)
+    assert res.blocking.pairs == seq.blocking.pairs, variant
+    assert res.matches == seq.matches, variant
+    assert res.blocking.overflow == 0
+    assert sum(res.blocking.load) == N
+    # shard_map in-process: mesh over however many local devices exist (the
+    # 8-device run lives in test_distributed_cpu) — bounds must match r
+    r_sm = api.ShardMapRunner().shards
+    b_sm = api.default_bounds(ents, cfg, r_sm)
+    sm = api.resolve(ents, cfg.with_(runner="shard_map",
+                                     hops=max(r_sm - 1, 1)), bounds=b_sm)
+    seq_sm = api.resolve(ents, cfg.with_(num_shards=r_sm,
+                                         hops=max(r_sm - 1, 1)), bounds=b_sm)
+    assert sm.blocking.pairs == seq_sm.blocking.pairs, variant
+    assert sm.matches == seq_sm.matches, variant
+    # boundary-complete variants == the full sequential SN pair set
+    keys, eids = np.asarray(ents["key"]), np.asarray(ents["eid"])
+    full = sn.sequential_sn_pairs(keys, eids, W)
+    if variant == "srp":
+        assert set(seq.blocking.pairs) <= full
+    else:
+        assert set(seq.blocking.pairs) == full
+
+
+def test_metrics_vs_oracle(ents, bounds):
+    res = api.resolve(ents, api.ERConfig(
+        window=W, variant="repsn", hops=R - 1, runner="vmap", num_shards=R,
+        compute_metrics=True), bounds=bounds)
+    m = res.metrics
+    assert m is not None
+    assert m.pairs_completeness == 1.0          # RepSN is complete
+    assert 0.0 < m.reduction_ratio < 1.0        # blocking prunes comparisons
+    assert m.total_comparisons == N * (N - 1) // 2
+    srp = api.resolve(ents, api.ERConfig(
+        window=W, variant="srp", runner="vmap", num_shards=R,
+        compute_metrics=True), bounds=bounds)
+    assert srp.metrics.pairs_completeness < 1.0  # boundary pairs missed
+
+
+def test_jobsn_boundary_dedup(ents, bounds):
+    """Main and boundary passes partition the pair set: no pair is counted
+    by both (mode='cross' is the paper's lineage-prefix duplicate filter),
+    and their union is exactly the sequential SN pair set."""
+    cfg = api.ERConfig(window=W, variant="jobsn", runner="vmap",
+                       num_shards=R)
+    out = api.VmapRunner(R).run_raw(ents, bounds, cfg)
+    main = api.pairs_from_band(out["main"], "mask")
+    boundary = api.pairs_from_band(out["boundary"], "mask")
+    assert main and boundary                      # both passes contribute
+    assert not (main & boundary)                  # counted once
+    loads = np.asarray(out["load"])[0]
+    if (loads >= W - 1).all():                    # paper's size assumption
+        keys, eids = np.asarray(ents["key"]), np.asarray(ents["eid"])
+        assert main | boundary == sn.sequential_sn_pairs(keys, eids, W)
+    # collect() must agree with the manual union (dedup by set semantics)
+    col = api.get_variant("jobsn").collect(out)
+    assert col.blocked == main | boundary
+    assert len(col.blocked) == len(main) + len(boundary)
+
+
+def test_cap_factor_overflow_reported():
+    """srp_shard's capacity-overflow count survives to BlockingResult and
+    balances the books: survivors + dropped == n (nothing silently lost)."""
+    rng = np.random.default_rng(0)
+    n, r = 128, 4
+    ents = E.synth_entities(rng, n, n_keys=16, skew=0.9)
+    bounds = P.range_partition(16, r)
+    tight = api.resolve(ents, api.ERConfig(
+        window=3, variant="srp", cap_factor=1.0, runner="vmap",
+        num_shards=r), bounds=bounds)
+    assert tight.blocking.overflow > 0
+    assert tight.blocking.total_load + tight.blocking.overflow == n
+    roomy = api.resolve(ents, api.ERConfig(
+        window=3, variant="srp", cap_factor=0.0, runner="vmap",
+        num_shards=r), bounds=bounds)
+    assert roomy.blocking.overflow == 0
+    assert roomy.blocking.total_load == n
+
+
+# -- dual-source (R x S) linkage --------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def sources():
+    """Two sources with planted cross-source duplicates: rhs is a perturbed
+    sample of lhs (same keys/payloads), so matches must be found."""
+    rng = np.random.default_rng(5)
+    lhs = E.synth_entities(rng, 200, n_keys=48, dup_frac=0.0)
+    take = rng.permutation(200)[:80]
+    rhs = {
+        "key": np.asarray(lhs["key"])[take],
+        "eid": np.arange(80, dtype=np.int32),
+        "valid": np.ones(80, bool),
+        "payload": {k: np.asarray(v)[take]
+                    for k, v in lhs["payload"].items()},
+    }
+    return lhs, E.make_entities(rhs["key"], rhs["eid"],
+                                payload=rhs["payload"])
+
+
+@pytest.mark.parametrize("runner", ["sequential", "vmap"])
+@pytest.mark.parametrize("variant", ["srp", "repsn", "jobsn"])
+def test_linkage_cross_source_only(sources, runner, variant):
+    lhs, rhs = sources
+    w = 5
+    res = api.link(lhs, rhs, api.ERConfig(
+        window=w, variant=variant, runner=runner, num_shards=R, hops=R - 1))
+    merged, offset = api.tag_sources(lhs, rhs)
+    keys = np.asarray(merged["key"])
+    eids = np.asarray(merged["eid"])
+    src = np.asarray(merged["payload"]["src"])
+    oracle = api.linkage.untag_pairs(
+        api.sequential_link_pairs(keys, eids, src, w), offset)
+    got = set(res.blocking.pairs)
+    # every pair is (lhs_eid, rhs_eid) — cross-source by construction
+    n_l, n_r = 200, 80
+    assert all(0 <= a < n_l and 0 <= b < n_r for a, b in got)
+    if variant == "srp":
+        assert got <= oracle
+    else:
+        assert got == oracle
+    # planted duplicates are found, and matches are blocked pairs
+    assert res.matches and res.matches <= res.blocking.pairs
+    assert any(np.asarray(lhs["key"])[a] == np.asarray(rhs["key"])[b]
+               for a, b in res.matches)
+
+
+def test_linkage_parallel_equals_sequential(sources):
+    lhs, rhs = sources
+    cfg = api.ERConfig(window=5, variant="repsn", hops=R - 1, num_shards=R)
+    seq = api.link(lhs, rhs, cfg.with_(runner="sequential"))
+    vm = api.link(lhs, rhs, cfg.with_(runner="vmap"))
+    assert seq.blocking.pairs == vm.blocking.pairs
+    assert seq.matches == vm.matches
+
+
+# -- registry ----------------------------------------------------------------------
+
+
+def test_config_and_facade_validation(ents):
+    with pytest.raises(ValueError, match="unknown runner"):
+        api.ERConfig(runner="vmapp")
+    with pytest.raises(ValueError, match="unknown partitioner"):
+        api.ERConfig(partitioner="balance")
+    with pytest.raises(ValueError, match="window"):
+        api.ERConfig(window=1)
+    # bounds/shards mismatch would silently drop entities — rejected
+    with pytest.raises(ValueError, match="partitions"):
+        api.resolve(ents, api.ERConfig(runner="vmap", num_shards=4),
+                    bounds=P.range_partition(NK, 8))
+    # halo variants need w-1 slots per shard: clear error, not a deep crash
+    tiny = E.synth_entities(np.random.default_rng(1), 3, n_keys=4)
+    with pytest.raises(ValueError, match="per-shard buffer"):
+        api.resolve(tiny, api.ERConfig(window=10, variant="repsn",
+                                       runner="vmap", num_shards=2))
+
+
+def test_registry_is_open_and_validating(ents, bounds):
+    assert set(api.available_variants()) >= {"srp", "repsn", "jobsn"}
+    with pytest.raises(ValueError, match="unknown SN variant"):
+        api.get_variant("nope")
+
+    from repro.api.variants import SrpVariant
+
+    @api.register_variant("srp_test_alias")
+    class AliasVariant(SrpVariant):
+        pass
+
+    try:
+        res = api.resolve(ents, api.ERConfig(
+            window=W, variant="srp_test_alias", runner="vmap",
+            num_shards=R), bounds=bounds)
+        srp = api.resolve(ents, api.ERConfig(
+            window=W, variant="srp", runner="vmap", num_shards=R),
+            bounds=bounds)
+        assert res.blocking.pairs == srp.blocking.pairs
+    finally:
+        from repro.api import variants as V
+        V._REGISTRY.pop("srp_test_alias", None)
+
+
+# -- deprecation shims -------------------------------------------------------------
+
+
+def test_old_pipeline_entry_points_still_work(ents, bounds):
+    from repro.core import pipeline as PL
+    cfg = PL.SNConfig(window=W, variant="jobsn")
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        out = PL.run_vmap(ents, R, bounds, cfg)
+        blocked = PL.blocked_pairs(out)
+        matched = PL.result_pairs(out)
+    res = api.resolve(ents, api.ERConfig(window=W, variant="jobsn",
+                                         runner="vmap", num_shards=R),
+                      bounds=bounds)
+    assert blocked == set(res.blocking.pairs)
+    assert matched == set(res.matches)
+    with pytest.raises(ValueError, match="unknown SN variant"):
+        PL.sn_shard(ents, bounds, R, "sn", PL.SNConfig(variant="bogus"))
+
+
+def test_old_entry_points_warn(ents, bounds):
+    from repro.core import pipeline as PL
+    with pytest.warns(DeprecationWarning):
+        out = PL.run_vmap(ents, R, bounds, PL.SNConfig(window=3))
+    with pytest.warns(DeprecationWarning):
+        PL.blocked_pairs(out)

@@ -89,11 +89,9 @@ def test_elastic_remesh_restore(setup, tmp_path):
     ck.save(3, state)
     n = len(jax.devices())
     if n == 1:
-        mesh = jax.make_mesh((1,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = jax.make_mesh((1,), ("data",))
     else:
-        mesh = jax.make_mesh((n // 2, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = jax.make_mesh((n // 2, 2), ("data", "model"))
     rules = Rules(mesh, fsdp=False)
     sh = steps.resolve_shardings(
         rules, steps.train_state_specs(cfg), state)

@@ -3,6 +3,8 @@ Jaccard, cascade skip semantics (paper §5.1 optimization)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")          # property tests need hypothesis
 from hypothesis import given, settings, strategies as st
 
 from repro.core import match as M
