@@ -7,6 +7,9 @@ controlled CPU device count, or inline for single-device measurements.
                            at r shards (real shard_map over r host devices)
   * skew_body            — Fig. 9 / Table 1: runtime + Gini per partitioner
   * jobsn_vs_repsn_body  — §5.2: variant comparison (time + collectives)
+  * band_engine_body     — §5.1: scan vs pallas band engine (matcher FLOPs,
+                           wall time, pairs/s) + packed-vs-set host
+                           collection — the BENCH_band_engine.json baseline
 """
 from __future__ import annotations
 
@@ -99,6 +102,105 @@ def skew_body(n: int = 60_000, w: int = 20, n_keys: int = 4096,
     return {"strategy": strategy, "r": r, "gini": round(g, 3),
             "seconds": dt, "max_load": int(sizes.max()),
             "pairs": n_pairs}
+
+
+def band_engine_body(n: int = 20_000, w: int = 10, n_keys: int = 2048,
+                     r: int = 4, variant: str = "repsn", reps: int = 3,
+                     collect_pairs: int = 100_000) -> dict:
+    """Scan vs pallas band engine on the vmap runner (single device).
+
+    Reports per engine: wall time, expensive-matcher evaluations ACTUALLY
+    run (the §5.1 FLOP lever — scan pays one full cascade per band slot;
+    pallas scores its cand_cap buffer, sized here by the DESIGN.md §6 rule:
+    probe survivor counts with an unbounded buffer, then cap at ~1.25x the
+    busiest shard so overflow is zero and parity holds), an estimated
+    matcher FLOP count, and pairs/sec.  Off-TPU the pallas kernel runs
+    under the interpreter, so WALL TIME on CPU is a correctness-path
+    number; ``matcher_evals`` is the hardware-independent claim.  Also
+    times host pair collection: packed uint64 (+np.unique) vs the
+    set-of-tuples baseline at ~``collect_pairs`` pairs."""
+    import jax
+    from repro import api
+    from repro.core import partition as P
+
+    ents = _setup(n, n_keys)
+    bounds = P.balanced_partition(np.asarray(ents["key"]), r)
+    feat_dim = ents["payload"]["feat"].shape[1]
+    sig_words = ents["payload"]["sig"].shape[1]
+    # crude per-evaluation cascade cost: cosine 2F FLOPs + jaccard ~6W ops
+    flops_per_eval = 2 * feat_dim + 6 * sig_words
+    runner = api.VmapRunner(r)
+
+    def survivors_per_shard(cfg):
+        # the DESIGN.md §6 sizing probe, via the public result surface:
+        # per-shard gate survivors with an unbounded buffer
+        return max(runner.resolve(ents, bounds, cfg).cand_count)
+
+    out = {"n": n, "w": w, "r": r, "variant": variant,
+           "backend": jax.default_backend(), "engines": {}}
+    results = {}
+    for engine in ["scan", "pallas"]:
+        cfg = api.ERConfig(window=w, variant=variant, hops=r - 1,
+                           runner="vmap", num_shards=r, band_engine=engine)
+        cand_cap = 0
+        if engine == "pallas":
+            cand_cap = int(survivors_per_shard(
+                cfg.with_(cand_cap=0)) * 1.25) + 16
+            cfg = cfg.with_(cand_cap=cand_cap)
+        raw = runner.run_raw(ents, bounds, cfg)         # compile + warm
+        jax.block_until_ready(raw["main"]["match"])
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            raw = runner.run_raw(ents, bounds, cfg)
+            jax.block_until_ready(raw["main"]["match"])
+        dt = (time.perf_counter() - t0) / reps
+        res = runner.resolve(ents, bounds, cfg)
+        results[engine] = res
+        out["engines"][engine] = {
+            "seconds": dt,
+            "matcher_evals": res.matcher_evals,
+            "matcher_flops_est": res.matcher_evals * flops_per_eval,
+            "band_slots": (w - 1) * sum(res.load),
+            "cand_cap": cand_cap,
+            "cand_count": sum(res.cand_count),
+            "cand_count_per_shard": list(res.cand_count),
+            "cand_overflow": res.cand_overflow,
+            "blocked": len(res.blocked),
+            "matched": len(res.matched),
+            "pairs_per_s": len(res.blocked) / max(dt, 1e-9),
+        }
+    out["parity"] = {
+        "blocked_equal": results["scan"].blocked == results["pallas"].blocked,
+        "matched_equal": results["scan"].matched == results["pallas"].matched,
+    }
+
+    # host pair collection: one synthetic stacked part with ~collect_pairs
+    # band hits, timed through both extraction paths
+    m = max(collect_pairs // (w - 1) + w, 4 * w)
+    rng = np.random.default_rng(0)
+    band = rng.random((1, w - 1, m)) < \
+        collect_pairs / ((w - 1) * m)
+    for d in range(1, w):                                # keep i + d < m
+        band[0, d - 1, m - d:] = False
+    part = {"ents": {"eid": np.arange(m, dtype=np.int32)[None, :]},
+            "match": band}
+
+    def timeit(fn, reps_c=5):
+        fn()
+        t0 = time.perf_counter()
+        for _ in range(reps_c):
+            fn()
+        return (time.perf_counter() - t0) / reps_c
+
+    t_set = timeit(lambda: api.pairs_from_band(part, "match"))
+    t_packed = timeit(lambda: api.packed_pairs_from_band(part, "match"))
+    out["collection"] = {
+        "pairs": int(band.sum()),
+        "set_seconds": t_set,
+        "packed_seconds": t_packed,
+        "speedup": t_set / max(t_packed, 1e-9),
+    }
+    return out
 
 
 def jobsn_vs_repsn_body(n: int = 60_000, w: int = 50, n_keys: int = 4096,

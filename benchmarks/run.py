@@ -9,6 +9,8 @@ Tables:
   fig8_scalability      paper Fig. 8: speedup vs #cores, w in {10, 100}
   tbl1_fig9_skew        paper Table 1 + Fig. 9: Gini vs runtime
   sec52_jobsn_vs_repsn  paper §5.2: JobSN vs RepSN (+ SRP baseline)
+  band_engine           §5.1 cascade: scan vs pallas band engine + packed
+                        pair collection; writes BENCH_band_engine.json
   kernels               Pallas band kernels vs jnp oracle (CPU timings)
   dedup_e2e             end-to-end corpus dedup throughput + SN-vs-n^2 factor
   roofline              summary of dry-run roofline terms (needs artifacts)
@@ -16,6 +18,7 @@ Tables:
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -71,6 +74,30 @@ def sec52_jobsn_vs_repsn(quick: bool):
         _row(f"sec52_{variant}", v["seconds"] * 1e6,
              f"pairs={v['pairs']};coll_bytes={v['collective_bytes']:.2e};"
              f"permutes={v['permute_count']}")
+
+
+def band_engine(quick: bool):
+    """Scan vs pallas band engine + host pair collection; persists the full
+    result dict to BENCH_band_engine.json so later PRs have a perf
+    trajectory baseline."""
+    from benchmarks.bench_sn import band_engine_body
+    res = band_engine_body(
+        n=6_000 if quick else 20_000, w=8 if quick else 10,
+        r=4, reps=2 if quick else 3,
+        collect_pairs=100_000)
+    for engine, v in res["engines"].items():
+        _row(f"band_engine_{engine}", v["seconds"] * 1e6,
+             f"matcher_evals={v['matcher_evals']};"
+             f"band_slots={v['band_slots']};"
+             f"cand_cap={v['cand_cap']};"
+             f"flops_est={v['matcher_flops_est']:.2e};"
+             f"pairs_per_s={v['pairs_per_s']:.2e}")
+    c = res["collection"]
+    _row("band_engine_collection", c["packed_seconds"] * 1e6,
+         f"pairs={c['pairs']};set_us={c['set_seconds'] * 1e6:.0f};"
+         f"packed_speedup={c['speedup']:.1f}x")
+    with open("BENCH_band_engine.json", "w") as f:
+        json.dump(res, f, indent=2)
 
 
 def kernels(quick: bool):
@@ -144,6 +171,7 @@ TABLES = {
     "fig8_scalability": fig8_scalability,
     "tbl1_fig9_skew": tbl1_fig9_skew,
     "sec52_jobsn_vs_repsn": sec52_jobsn_vs_repsn,
+    "band_engine": band_engine,
     "kernels": kernels,
     "dedup_e2e": dedup_e2e,
     "roofline": roofline,

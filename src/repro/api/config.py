@@ -8,12 +8,14 @@ boundaries are derived, and whether the run is dual-source linkage.
 from __future__ import annotations
 
 from dataclasses import dataclass, field, replace
+from typing import Optional
 
 from repro.core.match import CascadeMatcher, default_matcher
 
 VARIANTS = ("srp", "repsn", "jobsn")
 RUNNERS = ("sequential", "vmap", "shard_map")
 PARTITIONERS = ("balanced", "range", "sample")
+BAND_ENGINES = ("scan", "pallas")
 
 
 @dataclass(frozen=True)
@@ -28,6 +30,23 @@ class ERConfig:
                    (never overflows)
       matcher      cascade match strategy (paper §5.1 skip optimization)
       return_scores  keep band scores in raw runner output
+
+    Band engine (core/window.py — how each shard's window band is evaluated):
+      band_engine   "scan" (w-1 shifted full-matcher passes; reference
+                    oracle) | "pallas" (fused cheap-band kernel -> cumsum
+                    candidate compaction -> expensive matcher on survivors
+                    only: the §5.1 cascade with real FLOP savings)
+      band_block    Pallas row-block size Bi (band width w-1 must fit:
+                    w-1 <= band_block; VMEM grows as band_block^2)
+      cand_cap      per-shard survivor capacity of the cascade compaction;
+                    0 -> full band (w-1)*M: never overflows, but the
+                    expensive stage then scores (and gathers payload for)
+                    the whole band — a finite cap is both the FLOP and the
+                    memory lever (DESIGN.md §6 sizing rule).  Overflowing
+                    candidates are dropped AND counted (cand_overflow in
+                    results) — the SRP capacity model applied to matching
+      band_interpret  force the Pallas interpreter on/off; None -> auto
+                    (interpret off-TPU, native on TPU)
 
     Execution:
       runner       "sequential" (host oracle) | "vmap" (single device,
@@ -51,6 +70,11 @@ class ERConfig:
     matcher: CascadeMatcher = field(default_factory=default_matcher)
     return_scores: bool = False
 
+    band_engine: str = "scan"
+    band_block: int = 256
+    cand_cap: int = 0
+    band_interpret: Optional[bool] = None
+
     runner: str = "vmap"
     num_shards: int = 8
     partitioner: str = "balanced"
@@ -69,6 +93,22 @@ class ERConfig:
                              f"choose from {PARTITIONERS}")
         if self.num_shards < 1:
             raise ValueError(f"num_shards must be >= 1, got {self.num_shards}")
+        if self.band_engine not in BAND_ENGINES:
+            raise ValueError(f"unknown band engine {self.band_engine!r}; "
+                             f"choose from {BAND_ENGINES}")
+        if self.band_block < 1:
+            raise ValueError(f"band_block must be >= 1, got {self.band_block}")
+        if self.cand_cap < 0:
+            raise ValueError(f"cand_cap must be >= 0 (0 = unbounded), "
+                             f"got {self.cand_cap}")
+        if self.band_engine == "pallas" and self.window - 1 > self.band_block:
+            # the band kernels need the whole w-1 band inside one row block
+            # (plus its successor); catching this here beats a kernel assert
+            raise ValueError(
+                f"band_engine='pallas' needs the band width (window-1="
+                f"{self.window - 1}) to fit one row block, but band_block="
+                f"{self.band_block}; raise band_block (VMEM grows as "
+                f"band_block^2), lower window, or use band_engine='scan'")
         # variant names are validated lazily by the registry (so configs can
         # be built before a plugin variant registers itself)
 

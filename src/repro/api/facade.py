@@ -91,7 +91,10 @@ def resolve(ents: dict, cfg: ERConfig, *, bounds=None, mesh=None,
     blocking = BlockingResult(pairs=out.blocked, load=out.load,
                               overflow=out.overflow, variant=cfg.variant,
                               runner=runner.name, window=cfg.window,
-                              num_shards=out.num_shards)
+                              num_shards=out.num_shards,
+                              cand_count=out.cand_count,
+                              cand_overflow=out.cand_overflow,
+                              matcher_evals=out.matcher_evals)
     metrics = None
     if cfg.compute_metrics:
         from repro.api.variants import get_variant
@@ -117,7 +120,8 @@ def link(lhs: dict, rhs: dict, cfg: ERConfig, *, bounds=None, mesh=None,
     blocking = BlockingResult(
         pairs=frozenset(LK.untag_pairs(b.pairs, offset)), load=b.load,
         overflow=b.overflow, variant=b.variant, runner=b.runner,
-        window=b.window, num_shards=b.num_shards)
+        window=b.window, num_shards=b.num_shards, cand_count=b.cand_count,
+        cand_overflow=b.cand_overflow, matcher_evals=b.matcher_evals)
     return ERResult(blocking=blocking,
                     matches=frozenset(LK.untag_pairs(res.matches, offset)),
                     metrics=res.metrics)

@@ -25,11 +25,10 @@ Pair = Tuple[int, int]
 
 def cross_source_band(src: jax.Array, w: int) -> jax.Array:
     """(w-1, M) mask: row d-1 true where src[i] != src[i+d] (same band layout
-    as window.band_scores; scanned so live memory stays O(M))."""
-    def step(_, d):
-        return None, src != jnp.roll(src, -d)
-    _, rows = jax.lax.scan(step, None, jnp.arange(1, w, dtype=jnp.int32))
-    return rows
+    as window.band_scores).  Delegates to ``window.cross_source_rows`` — the
+    single implementation both band engines use."""
+    from repro.core.window import cross_source_rows
+    return cross_source_rows(src, w)
 
 
 def tag_sources(lhs: dict, rhs: dict) -> Tuple[dict, int]:
@@ -68,6 +67,21 @@ def filter_cross_source(pairs, eids: np.ndarray, src: np.ndarray):
     """Keep only pairs whose endpoints carry different source tags."""
     by_eid = dict(zip(eids.tolist(), src.tolist()))
     return {(a, b) for a, b in pairs if by_eid[a] != by_eid[b]}
+
+
+def filter_cross_source_packed(packed: np.ndarray, eids: np.ndarray,
+                               src: np.ndarray) -> np.ndarray:
+    """Vectorized ``filter_cross_source`` over a packed uint64 pair array
+    (eid -> src lookup via searchsorted; no Python dict / tuple objects)."""
+    from repro.api import results as RES
+    if packed.size == 0:
+        return packed
+    order = np.argsort(eids)
+    sorted_eids, sorted_src = eids[order], src[order]
+    lo, hi = RES.unpack_pairs(packed)
+    s_lo = sorted_src[np.searchsorted(sorted_eids, lo)]
+    s_hi = sorted_src[np.searchsorted(sorted_eids, hi)]
+    return packed[s_lo != s_hi]
 
 
 def sequential_link_pairs(keys: np.ndarray, eids: np.ndarray,

@@ -3,6 +3,12 @@
 Replaces the raw nested dicts the old pipeline returned: results carry the
 pair sets, per-shard load, overflow accounting, and (optionally) blocking
 quality metrics computed against the sequential oracle.
+
+Internally pairs travel as PACKED uint64 arrays — ``(lo << 32) | hi`` with
+``lo < hi`` eids — deduplicated by ``np.unique``.  Collection is then one
+batched nonzero + pack + unique (linear, vectorized) instead of building
+millions of Python tuples; frozensets of (lo, hi) tuples appear only at the
+public ``RunnerOutcome``/``BlockingResult`` boundary.
 """
 from __future__ import annotations
 
@@ -13,10 +19,47 @@ import numpy as np
 
 Pair = Tuple[int, int]
 
+PACKED_DTYPE = np.uint64
+
+
+def pack_pairs(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Elementwise (a, b) eid pairs -> canonical packed uint64
+    ``(min << 32) | max``.  Eids must be non-negative and < 2^32."""
+    a = np.asarray(a, PACKED_DTYPE)
+    b = np.asarray(b, PACKED_DTYPE)
+    lo = np.minimum(a, b)
+    hi = np.maximum(a, b)
+    return (lo << PACKED_DTYPE(32)) | hi
+
+
+def unpack_pairs(packed: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Packed uint64 -> (lo, hi) int64 arrays."""
+    packed = np.asarray(packed, PACKED_DTYPE)
+    lo = (packed >> PACKED_DTYPE(32)).astype(np.int64)
+    hi = (packed & PACKED_DTYPE(0xFFFFFFFF)).astype(np.int64)
+    return lo, hi
+
+
+def pack_pair_set(pairs: Set[Pair]) -> np.ndarray:
+    """Host pair set -> sorted deduplicated packed array."""
+    if not pairs:
+        return np.empty((0,), PACKED_DTYPE)
+    flat = np.fromiter((c for p in pairs for c in p), np.int64,
+                       2 * len(pairs)).reshape(-1, 2)
+    return np.unique(pack_pairs(flat[:, 0], flat[:, 1]))
+
+
+def packed_to_frozenset(packed: np.ndarray) -> FrozenSet[Pair]:
+    """Packed array -> public frozenset of (lo, hi) tuples (the one place
+    Python pair objects are materialized)."""
+    lo, hi = unpack_pairs(packed)
+    return frozenset(zip(lo.tolist(), hi.tolist()))
+
 
 class CollectedPairs(NamedTuple):
-    blocked: FrozenSet[Pair]
-    matched: FrozenSet[Pair]
+    """Deduplicated packed uint64 pair arrays (see ``pack_pairs``)."""
+    blocked: np.ndarray
+    matched: np.ndarray
 
 
 @dataclass(frozen=True)
@@ -43,6 +86,9 @@ class BlockingResult:
     runner: str
     window: int
     num_shards: int
+    cand_count: Tuple[int, ...] = ()  # per-shard gate survivors (pallas)
+    cand_overflow: int = 0          # cascade survivors dropped by cand_cap
+    matcher_evals: int = 0          # full-cascade evaluations actually run
 
     @property
     def max_load(self) -> int:
@@ -65,15 +111,29 @@ class ERResult:
         return self.blocking.pairs
 
 
-# -- pair extraction (band mask -> host pair set) --------------------------------
+# -- pair extraction (band mask -> host pairs) --------------------------------------
 
-def pairs_from_band(part: dict, field: str = "match") -> Set[Pair]:
-    """Vectorized band -> pair-set conversion.
+def packed_pairs_from_band(part: dict, field: str = "match") -> np.ndarray:
+    """Vectorized band -> deduplicated packed pair array (the hot host path).
 
     ``part``: stacked per-shard output dict with ``ents`` (eid: (r, M)) and a
     boolean band ``field`` of shape (r, w-1, M); band[s, d-1, i] pairs slot i
-    with slot i+d of shard s.  One batched nonzero + fancy indexing replaces
-    the old per-shard Python loops (the host-side bottleneck at large n*r)."""
+    with slot i+d of shard s.  One batched nonzero + pack + ``np.unique`` —
+    no Python pair objects anywhere on the path."""
+    eid = np.asarray(part["ents"]["eid"])                 # (r, M)
+    band = np.asarray(part[field])                        # (r, w-1, M)
+    ss, ds, iis = np.nonzero(band)
+    if ss.size == 0:
+        return np.empty((0,), PACKED_DTYPE)
+    a = eid[ss, iis]
+    b = eid[ss, iis + ds + 1]       # in-bounds: masks force i + d < M
+    return np.unique(pack_pairs(a, b))
+
+
+def pairs_from_band(part: dict, field: str = "match") -> Set[Pair]:
+    """Band -> Python pair set.  Kept as the public/reference surface (and
+    the benchmark baseline); the collection hot path is
+    ``packed_pairs_from_band``."""
     eid = np.asarray(part["ents"]["eid"])                 # (r, M)
     band = np.asarray(part[field])                        # (r, w-1, M)
     ss, ds, iis = np.nonzero(band)

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api import linkage as LK
+from repro.api import results as RES
 from repro.api.variants import get_variant
 from repro.core import entities as E
 
@@ -34,12 +35,25 @@ Pair = Tuple[int, int]
 
 
 class RunnerOutcome(NamedTuple):
-    """What every runner returns: host pair sets + accounting."""
+    """What every runner returns: host pair sets + accounting.
+
+    ``cand_count`` is the PER-SHARD cascade-gate survivors kept (pallas
+    band engine; zeros for scan) — per-shard like ``load`` so the
+    DESIGN.md §6 cand_cap sizing rule (cap ~1.25x the busiest shard) is
+    executable from the public result.  ``cand_overflow`` counts survivors
+    dropped by ``cfg.cand_cap`` (may lose MATCHES, never blocked pairs);
+    ``matcher_evals`` counts full-cascade evaluations ACTUALLY run — one
+    per band slot for scan, one per cand_cap buffer slot for pallas (static
+    shapes: a finite cand_cap is the §5.1 FLOP lever, reported honestly so
+    benchmarks can verify it)."""
     blocked: FrozenSet[Pair]
     matched: FrozenSet[Pair]
     load: Tuple[int, ...]
     overflow: int
     num_shards: int
+    cand_count: Tuple[int, ...] = ()
+    cand_overflow: int = 0
+    matcher_evals: int = 0
 
 
 @runtime_checkable
@@ -64,11 +78,23 @@ def shard_input(ents: dict, r: int) -> dict:
 
 
 def _device_outcome(out: dict, cfg, r: int) -> RunnerOutcome:
-    col = get_variant(cfg.variant).collect(out)
+    variant = get_variant(cfg.variant)
+    col = variant.collect(out)
     load = tuple(int(x) for x in np.asarray(out["load"])[0])
     overflow = int(np.asarray(out["overflow"])[0])
-    return RunnerOutcome(blocked=col.blocked, matched=col.matched,
-                         load=load, overflow=overflow, num_shards=r)
+    cand_count = np.zeros(r, np.int64)
+    cand_overflow = matcher_evals = 0
+    for p in variant.parts:
+        if p in out:
+            cand_count += np.asarray(out[p]["cand_count"], np.int64)
+            cand_overflow += int(np.asarray(out[p]["cand_overflow"]).sum())
+            matcher_evals += int(np.asarray(out[p]["matcher_evals"]).sum())
+    return RunnerOutcome(blocked=RES.packed_to_frozenset(col.blocked),
+                         matched=RES.packed_to_frozenset(col.matched),
+                         load=load, overflow=overflow, num_shards=r,
+                         cand_count=tuple(int(c) for c in cand_count),
+                         cand_overflow=cand_overflow,
+                         matcher_evals=matcher_evals)
 
 
 @dataclass(frozen=True)
@@ -166,40 +192,43 @@ class SequentialRunner:
         keys = np.asarray(ents["key"])[valid]
         eids = np.asarray(ents["eid"])[valid]
 
-        blocked = get_variant(cfg.variant).sequential_pairs(
-            keys, eids, bounds, cfg.window)
+        blocked = RES.pack_pair_set(get_variant(cfg.variant).sequential_pairs(
+            keys, eids, bounds, cfg.window))
         if getattr(cfg, "linkage", False) and "src" in ents["payload"]:
             src = np.asarray(ents["payload"]["src"])[valid]
-            blocked = LK.filter_cross_source(blocked, eids, src)
+            blocked = LK.filter_cross_source_packed(blocked, eids, src)
         matched = self._match(ents, blocked, cfg)
 
         part = np.searchsorted(bounds, keys, side="left")
         load = tuple(np.bincount(part, minlength=r).astype(int).tolist())
-        return RunnerOutcome(blocked=frozenset(blocked), matched=matched,
-                             load=load, overflow=0, num_shards=r)
+        return RunnerOutcome(blocked=RES.packed_to_frozenset(blocked),
+                             matched=RES.packed_to_frozenset(matched),
+                             load=load, overflow=0, num_shards=r,
+                             matcher_evals=int(blocked.size))
 
-    def _match(self, ents: dict, blocked, cfg) -> FrozenSet[Pair]:
-        """Batch-score blocked pairs with the cascade matcher (skip=False:
-        identical accept/reject decisions, exact scores)."""
-        if not blocked:
-            return frozenset()
+    def _match(self, ents: dict, blocked: np.ndarray, cfg) -> np.ndarray:
+        """Batch-score blocked pairs (packed uint64 array) with the cascade
+        matcher (skip=False: identical accept/reject decisions, exact
+        scores).  Returns the matched subset, still packed."""
+        if blocked.size == 0:
+            return blocked
         valid = np.asarray(ents["valid"])
         rows = np.nonzero(valid)[0]
         eids = np.asarray(ents["eid"])[rows]
         order = np.argsort(eids)
         sorted_eids, sorted_rows = eids[order], rows[order]
-        pairs = np.asarray(sorted(blocked), dtype=np.int64)     # (P, 2)
-        ra = sorted_rows[np.searchsorted(sorted_eids, pairs[:, 0])]
-        rb = sorted_rows[np.searchsorted(sorted_eids, pairs[:, 1])]
+        blocked = np.sort(blocked)          # == lexicographic (lo, hi) order
+        plo, phi = RES.unpack_pairs(blocked)
+        ra = sorted_rows[np.searchsorted(sorted_eids, plo)]
+        rb = sorted_rows[np.searchsorted(sorted_eids, phi)]
         payload = {k: np.asarray(v) for k, v in ents["payload"].items()}
 
-        matched = set()
-        for s in range(0, len(pairs), self.match_chunk):
+        keep = np.zeros(blocked.shape[0], bool)
+        for s in range(0, blocked.shape[0], self.match_chunk):
             ia, ib = ra[s:s + self.match_chunk], rb[s:s + self.match_chunk]
             pa = {k: jnp.asarray(v[ia]) for k, v in payload.items()}
             pb = {k: jnp.asarray(v[ib]) for k, v in payload.items()}
             score, _ = cfg.matcher.combined(pa, pb, skip=False)
-            ok = np.asarray(score >= cfg.matcher.threshold)
-            matched.update(
-                map(tuple, pairs[s:s + self.match_chunk][ok].tolist()))
-        return frozenset(matched)
+            keep[s:s + self.match_chunk] = np.asarray(
+                score >= cfg.matcher.threshold)
+        return blocked[keep]

@@ -27,7 +27,6 @@ from repro.core import repsn as R
 from repro.core import sn
 from repro.core import srp as S
 from repro.core import window as W
-from repro.api import linkage as LK
 from repro.api import results as RES
 
 _REGISTRY: Dict[str, Type["VariantBase"]] = {}
@@ -85,30 +84,31 @@ class VariantBase:
         raise NotImplementedError
 
     def _band(self, e: dict, halo_len: int, mode: str, cfg) -> dict:
-        scores, mask = W.band_scores(e, cfg.window, cfg.matcher,
-                                     halo_len=halo_len, mode=mode)
-        if getattr(cfg, "linkage", False) and "src" in e["payload"]:
-            mask = mask & LK.cross_source_band(e["payload"]["src"],
-                                               cfg.window)
-        match = (scores >= cfg.matcher.threshold) & mask
-        out = {"ents": e, "halo_len": halo_len, "mask": mask, "match": match}
-        if cfg.return_scores:
-            out["scores"] = scores
+        """Evaluate this part's window band with the configured BandEngine
+        (scan oracle or the Pallas cascade — see core/window.py); the engine
+        owns masking (incl. the linkage cross-source rule), matching, and
+        the cascade's candidate/overflow accounting."""
+        engine = W.get_band_engine(getattr(cfg, "band_engine", "scan"))
+        out = engine.band(e, cfg, halo_len=halo_len, mode=mode)
+        out["ents"] = e
+        out["halo_len"] = halo_len
         return out
 
     # -- host side -----------------------------------------------------------
 
     def collect(self, out: dict) -> RES.CollectedPairs:
-        """Stacked runner output -> deduplicated host pair sets.  Parts are
-        unioned, so a pair emitted by several parts/shards counts once."""
-        blocked: Set[Tuple[int, int]] = set()
-        matched: Set[Tuple[int, int]] = set()
-        for p in self.parts:
-            if p in out:
-                blocked |= RES.pairs_from_band(out[p], "mask")
-                matched |= RES.pairs_from_band(out[p], "match")
-        return RES.CollectedPairs(blocked=frozenset(blocked),
-                                  matched=frozenset(matched))
+        """Stacked runner output -> deduplicated PACKED pair arrays (uint64
+        ``(lo << 32) | hi``).  Parts are unioned via np.unique, so a pair
+        emitted by several parts/shards counts once; frozensets appear only
+        at the RunnerOutcome boundary."""
+        blocked = [RES.packed_pairs_from_band(out[p], "mask")
+                   for p in self.parts if p in out]
+        matched = [RES.packed_pairs_from_band(out[p], "match")
+                   for p in self.parts if p in out]
+        dedup = lambda parts: np.unique(np.concatenate(parts)) if parts \
+            else np.empty((0,), RES.PACKED_DTYPE)
+        return RES.CollectedPairs(blocked=dedup(blocked),
+                                  matched=dedup(matched))
 
     def sequential_pairs(self, keys: np.ndarray, eids: np.ndarray,
                          bounds: np.ndarray, w: int) -> Set[Tuple[int, int]]:

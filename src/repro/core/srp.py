@@ -46,14 +46,14 @@ def bucketize(ents: dict, dest: jax.Array, r: int,
     src = E.permute(ents, order)
     out = E.empty_like(ents, n_slots + 1)
 
-    def scat(buf, val, fill=None):
+    def scat(buf, val):
         return buf.at[slot].set(val, mode="drop")
 
     out["key"] = scat(out["key"], jnp.where(keep, src["key"], E.INVALID_KEY))
     out["eid"] = scat(out["eid"], src["eid"])
     out["valid"] = scat(out["valid"], src["valid"] & keep)
-    for k, v in src["payload"].items():
-        out["payload"][k] = out["payload"][k].at[slot].set(v, mode="drop")
+    out["payload"] = {k: scat(out["payload"][k], v)
+                      for k, v in src["payload"].items()}
     out = jax.tree.map(lambda a: a[:n_slots], out)
     overflow = jnp.sum((~keep) & (sd < r)).astype(jnp.int32)
     return out, overflow

@@ -6,22 +6,45 @@ masking + the slot conventions (valid entities contiguous in key order, halo
 entities occupying the first ``halo_len`` slots) make slot distance equal
 rank distance, so the band is exactly the paper's sliding window.
 
-Three evaluation paths:
-  * ``band_scores``         pure-JAX scan over distances (memory-safe oracle)
-  * kernels.banded_ops      Pallas MXU band kernels (hot path; see kernels/)
-  * ``band_matches_cascade``the paper's §5.1 two-stage skip optimization:
-                            cheap band -> compact candidates -> exact matcher
+Band evaluation is a pluggable seam — a **BandEngine** selected by
+``ERConfig.band_engine`` and used by every variant's ``_band`` hook:
+
+  * ``scan``    (ScanBandEngine) pure-JAX scan over distances: w-1 shifted
+                full-payload passes through ``CascadeMatcher.combined``.
+                Memory-safe reference oracle; the §5.1 "skip" is a
+                ``jnp.where`` that still computes both branches.
+  * ``pallas``  (PallasBandEngine) the paper's §5.1 two-stage cascade with
+                REAL FLOP savings: a fused Pallas kernel
+                (kernels/fused_band.py) evaluates the cheap matchers for the
+                whole band at MXU rate, cumsum-based compaction
+                (``compact_candidates``) packs gate survivors into a
+                ``cand_cap`` buffer (overflow counted, never silent), and
+                the expensive matcher (``score_candidates``) runs ONLY on
+                survivors.  Decisions match the scan engine exactly: the
+                gate keeps every pair whose best-achievable combined score
+                can still reach the threshold (plus an epsilon guard for
+                kernel-vs-jnp rounding), and survivors are rescored with
+                the full jnp cascade.
+
+Engines register with ``@register_band_engine("name")``; both return the
+same part dict (``mask``/``match``/``matcher_evals``/``cand_overflow``), so
+variants and runners never branch on the engine.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Dict, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple, Type
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import entities as E
 from repro.core.match import CascadeMatcher
+
+# epsilon guard on the cascade gate: the fused kernel's cheap scores can
+# differ from the jnp oracle by reduction-order ulps; widening the gate by
+# GATE_EPS (in normalized-score units) keeps every pair the scan engine
+# could accept, and extra survivors are exactly rescored anyway.
+GATE_EPS = 1e-5
 
 
 def _pair_mask(valid: jax.Array, d: jax.Array, *, halo_len: int,
@@ -45,6 +68,30 @@ def _pair_mask(valid: jax.Array, d: jax.Array, *, halo_len: int,
     elif mode == "cross":
         ok &= (i < halo_len) & (j >= halo_len)
     return ok
+
+
+def cross_source_rows(src: jax.Array, w: int) -> jax.Array:
+    """(w-1, M) linkage mask: row d-1 true where src[i] != src[i+d] — THE
+    one implementation of the cross-source rule (api.linkage and both band
+    engines delegate here)."""
+    def step(_, d):
+        return None, src != jnp.roll(src, -d)
+    _, rows = jax.lax.scan(step, None, jnp.arange(1, w, dtype=jnp.int32))
+    return rows
+
+
+def band_mask(valid: jax.Array, w: int, *, halo_len: int = 0,
+              mode: str = "all",
+              src: Optional[jax.Array] = None) -> jax.Array:
+    """(w-1, M) validity band: row d-1 masks distance-d pairs.  ``src``
+    (linkage mode) additionally restricts to cross-source pairs via
+    ``cross_source_rows``."""
+    def step(_, d):
+        return None, _pair_mask(valid, d, halo_len=halo_len, mode=mode)
+    _, rows = jax.lax.scan(step, None, jnp.arange(1, w, dtype=jnp.int32))
+    if src is not None:
+        rows = rows & cross_source_rows(src, w)
+    return rows
 
 
 def band_scores(ents: dict, w: int, matcher: CascadeMatcher, *,
@@ -74,21 +121,33 @@ def band_matches(ents: dict, w: int, matcher: CascadeMatcher, *,
     return (scores >= matcher.threshold) & mask
 
 
-def compact_candidates(scores: jax.Array, mask: jax.Array, tau: float,
-                       cap: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Stage-2 of the cascade: compact (d, i) band positions whose cheap
-    score >= tau into a fixed-capacity candidate list.
+def compact_candidates(gate: jax.Array, cap: int
+                       ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                  jax.Array, jax.Array]:
+    """Stage-2 of the cascade: pack the True (d, i) band positions of
+    ``gate`` (w-1, M) into a fixed-capacity candidate list, in band order.
 
-    Returns (cand_i, cand_d, cand_valid) each (cap,)."""
-    flat = (scores >= tau) & mask                      # (w-1, M)
-    wm1, m = flat.shape
-    flat1 = flat.reshape(-1)
-    # stable order: candidates first
-    order = jnp.argsort(~flat1, stable=True)[:cap]
-    val = flat1[order]
-    d = order // m + 1
-    i = order % m
-    return i.astype(jnp.int32), d.astype(jnp.int32), val
+    Cumsum-based: each survivor's slot is its exclusive prefix count — O(wM)
+    work and one scatter, vs the old full-band argsort's O(wM log wM).
+
+    Returns (cand_i, cand_d, cand_valid, n_cand, overflow); candidates past
+    ``cap`` are dropped but counted in ``overflow`` (never silent)."""
+    wm1, m = gate.shape
+    flat = gate.reshape(-1)
+    n = flat.shape[0]
+    rank = jnp.cumsum(flat.astype(jnp.int32)) - 1          # survivor rank
+    n_cand = jnp.sum(flat.astype(jnp.int32))
+    target = jnp.where(flat & (rank < cap), rank, cap)     # cap -> dump slot
+    buf = jnp.zeros((cap + 1,), jnp.int32).at[target].set(
+        jnp.arange(n, dtype=jnp.int32), mode="drop")
+    cand_flat = buf[:cap]
+    kept = jnp.minimum(n_cand, cap)
+    cand_valid = jnp.arange(cap, dtype=jnp.int32) < kept
+    cand_d = cand_flat // m + 1
+    cand_i = cand_flat % m
+    overflow = jnp.maximum(n_cand - cap, 0)
+    return (cand_i.astype(jnp.int32), cand_d.astype(jnp.int32), cand_valid,
+            n_cand, overflow)
 
 
 def score_candidates(ents: dict, cand_i, cand_d, cand_valid,
@@ -105,3 +164,194 @@ def score_candidates(ents: dict, cand_i, cand_d, cand_valid,
 
 def band_pair_count(mask: jax.Array) -> jax.Array:
     return jnp.sum(mask.astype(jnp.int32))
+
+
+# -- band engines -------------------------------------------------------------------
+
+_BAND_ENGINES: Dict[str, Type["BandEngine"]] = {}
+
+
+def register_band_engine(name: str):
+    """Class decorator: ``@register_band_engine("pallas")``."""
+    def deco(cls):
+        cls.name = name
+        _BAND_ENGINES[name] = cls
+        return cls
+    return deco
+
+
+def get_band_engine(name: str) -> "BandEngine":
+    try:
+        return _BAND_ENGINES[name]()
+    except KeyError:
+        raise ValueError(
+            f"unknown band engine {name!r}; registered: "
+            f"{available_band_engines()}") from None
+
+
+def available_band_engines() -> Tuple[str, ...]:
+    return tuple(sorted(_BAND_ENGINES))
+
+
+class BandEngine:
+    """One way to evaluate the sliding-window band of a sorted shard.
+
+    ``band(ents, cfg, halo_len=..., mode=...)`` returns the per-part dict
+    consumed by variants/runners/collectors:
+
+      mask           (w-1, M) bool   blocked (candidate) pairs
+      match          (w-1, M) bool   matcher-accepted pairs
+      matcher_evals  ()       int32  full-cascade evaluations ACTUALLY run
+                                     (static-shape honest: the pallas
+                                     engine's expensive stage scores its
+                                     whole cand_cap buffer, so a finite
+                                     cand_cap is what buys the FLOP cut)
+      cand_count     ()       int32  cascade-gate survivors kept (pallas;
+                                     0 for scan — no gate)
+      cand_overflow  ()       int32  gate survivors dropped by cand_cap
+      scores         (w-1, M) f32    only when cfg.return_scores
+    """
+
+    name = "?"
+
+    def band(self, ents: dict, cfg, *, halo_len: int, mode: str) -> dict:
+        raise NotImplementedError
+
+    @staticmethod
+    def _src(ents: dict, cfg) -> Optional[jax.Array]:
+        if getattr(cfg, "linkage", False) and "src" in ents["payload"]:
+            return ents["payload"]["src"]
+        return None
+
+
+@register_band_engine("scan")
+class ScanBandEngine(BandEngine):
+    """Reference oracle: w-1 shifted full-payload passes.  The cascade skip
+    is a ``jnp.where`` — both branches are computed, so every band slot
+    costs one full matcher evaluation."""
+
+    def band(self, ents: dict, cfg, *, halo_len: int, mode: str) -> dict:
+        scores, mask = band_scores(ents, cfg.window, cfg.matcher,
+                                   halo_len=halo_len, mode=mode)
+        src = self._src(ents, cfg)
+        if src is not None:
+            mask = mask & cross_source_rows(src, cfg.window)
+        match = (scores >= cfg.matcher.threshold) & mask
+        m = ents["valid"].shape[0]
+        out = {"mask": mask, "match": match,
+               "matcher_evals": jnp.int32((cfg.window - 1) * m),
+               "cand_count": jnp.int32(0),
+               "cand_overflow": jnp.int32(0)}
+        if cfg.return_scores:
+            out["scores"] = scores
+        return out
+
+
+@dataclass(frozen=True)
+class CascadeSplit:
+    """How the matcher cascade maps onto the fused kernel: the cheap prefix
+    (cosine and/or jaccard, kernel-supported) and the gate threshold for the
+    UNNORMALIZED partial score the kernel emits."""
+    feat_field: Optional[str]
+    sig_field: Optional[str]
+    w_cos: float
+    w_jac: float
+    tau_partial: float       # gate: cheap_partial >= tau_partial
+
+
+def split_cascade(matcher: CascadeMatcher,
+                  payload: dict) -> Optional[CascadeSplit]:
+    """Split the cost-ordered cascade into a kernel-supported cheap prefix
+    (one cosine field + one jaccard field, in cost order) and the remainder.
+    Returns None when the FIRST matcher is unsupported (no cheap stage — the
+    pallas engine then falls back to the scan oracle)."""
+    w_cos = w_jac = 0.0
+    feat_field = sig_field = None
+    prefix_w = 0.0
+    for m in matcher.ordered():
+        if m.kind == "cosine" and feat_field is None and m.field in payload:
+            feat_field, w_cos = m.field, m.weight
+        elif m.kind == "jaccard" and sig_field is None and m.field in payload:
+            sig_field, w_jac = m.field, m.weight
+        else:
+            break
+        prefix_w += m.weight
+    if feat_field is None and sig_field is None:
+        return None
+    wsum = sum(m.weight for m in matcher.matchers)
+    remaining = wsum - prefix_w
+    # gate passes iff (cheap + remaining)/wsum >= threshold - GATE_EPS
+    tau = (matcher.threshold - GATE_EPS) * wsum - remaining
+    return CascadeSplit(feat_field=feat_field, sig_field=sig_field,
+                        w_cos=w_cos, w_jac=w_jac, tau_partial=tau)
+
+
+@register_band_engine("pallas")
+class PallasBandEngine(BandEngine):
+    """The §5.1 cascade end-to-end on device: fused cheap-band kernel ->
+    cumsum compaction -> exact matcher on survivors only.
+
+    cand_cap (cfg.cand_cap; 0 = full band, never overflows) bounds the
+    survivor buffer exactly like SRP's cap_link bounds the shuffle:
+    candidates past the cap are dropped and counted in ``cand_overflow``.
+    Dropped candidates can only LOSE matches (blocked pairs come from the
+    pre-compaction mask), mirroring the paper's capacity/overflow
+    accounting.
+
+    Because XLA shapes are static, the expensive stage scores the WHOLE
+    cand_cap buffer — cand_cap is therefore the FLOP *and memory* lever:
+    cand_cap=0 (parity-safe default) keeps a full-band buffer, saving
+    nothing on the expensive stage and gathering O(w*M*F) payload slices
+    (vs the scan engine's O(M*F) live set — large w*M needs a finite cap);
+    a finite cap sized above the survivor count (see DESIGN.md §6) gets
+    the cascade cut with zero overflow."""
+
+    def band(self, ents: dict, cfg, *, halo_len: int, mode: str) -> dict:
+        from repro.kernels import ops
+
+        split = split_cascade(cfg.matcher, ents["payload"])
+        if split is None:     # no kernel-supported cheap stage
+            return ScanBandEngine().band(ents, cfg, halo_len=halo_len,
+                                         mode=mode)
+        w = cfg.window
+        valid = ents["valid"]
+        m = valid.shape[0]
+        mask = band_mask(valid, w, halo_len=halo_len, mode=mode,
+                         src=self._src(ents, cfg))
+
+        payload = ents["payload"]
+        feat = payload[split.feat_field] if split.feat_field else \
+            jnp.zeros((m, 1), jnp.float32)
+        sig = payload[split.sig_field] if split.sig_field else \
+            jnp.zeros((m, 1), jnp.uint32)
+        cheap = ops.fused_cheap_band(
+            feat, sig, window=w - 1, w_cos=split.w_cos, w_jac=split.w_jac,
+            block_i=cfg.band_block, interpret=cfg.band_interpret)
+        gate = (cheap.T >= split.tau_partial) & mask        # (w-1, M)
+
+        cap = cfg.cand_cap if cfg.cand_cap > 0 else (w - 1) * m
+        cand_i, cand_d, cand_valid, n_cand, overflow = \
+            compact_candidates(gate, cap)
+        score = score_candidates(ents, cand_i, cand_d, cand_valid,
+                                 cfg.matcher)
+        accept = cand_valid & (score >= cfg.matcher.threshold)
+
+        flat_idx = (cand_d - 1) * m + cand_i
+        safe = jnp.where(cand_valid, flat_idx, (w - 1) * m)  # OOB -> dropped
+        match = jnp.zeros(((w - 1) * m,), bool).at[safe].set(
+            accept, mode="drop").reshape(w - 1, m)
+        out = {"mask": mask, "match": match,
+               # static shapes mean the expensive stage scores the whole
+               # cand_cap buffer (invalid slots included) — report THAT,
+               # not the survivor count: with cand_cap=0 the buffer is the
+               # full band and there is no expensive-stage saving
+               "matcher_evals": jnp.int32(cap),
+               "cand_count": jnp.minimum(n_cand, cap).astype(jnp.int32),
+               "cand_overflow": overflow.astype(jnp.int32)}
+        if cfg.return_scores:
+            # survivors carry their exact rescored value; gated-out slots are
+            # 0 (they are sub-threshold by construction)
+            out["scores"] = jnp.zeros(((w - 1) * m,), jnp.float32).at[
+                safe].set(jnp.where(cand_valid, score, 0.0),
+                          mode="drop").reshape(w - 1, m)
+        return out

@@ -12,12 +12,32 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.banded_sim import banded_sim_tiles
+from repro.kernels.fused_band import fused_band_scores
 from repro.kernels.jaccard_band import jaccard_band_tiles
 from repro.kernels.local_attn import local_attention
 
 
 def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def resolve_block_i(m: int, window: int, block_i: int) -> int:
+    """Pick the row-block size for a band kernel.
+
+    The band kernels require ``window <= block_i`` (each row's whole band
+    lives in its own tile + the successor tile).  Naively clamping
+    ``bi = min(block_i, m)`` violates that for small M, so when the clamped
+    block is too small for the window we grow it back up to ``window`` (the
+    caller pads M up to a multiple of the block — safe, padded rows are
+    masked).  A window that cannot fit in ``block_i`` at all is a config
+    error, reported actionably instead of tripping the kernel's assert."""
+    if window > block_i:
+        raise ValueError(
+            f"band window={window} exceeds block_i={block_i}; the band "
+            f"kernels need window <= block_i (one tile + successor covers "
+            f"the whole band).  Raise block_i (VMEM grows as block_i^2) or "
+            f"use the scan band engine")
+    return max(min(block_i, m), window)
 
 
 def band_from_tiles(tiles: jax.Array, *, window: int,
@@ -41,7 +61,7 @@ def banded_dot_band(feat: jax.Array, *, window: int, block_i: int = 256,
     """Banded <feat_i, feat_j> similarity: (M, F) -> (M, window)."""
     interpret = default_interpret() if interpret is None else interpret
     m, f = feat.shape
-    bi = min(block_i, m)
+    bi = resolve_block_i(m, window, block_i)
     pad = (-m) % bi
     if pad:
         feat = jnp.pad(feat, ((0, pad), (0, 0)))
@@ -56,13 +76,37 @@ def jaccard_band(sig: jax.Array, *, window: int, block_i: int = 256,
     """Banded Jaccard over bit signatures: (M, W32) -> (M, window)."""
     interpret = default_interpret() if interpret is None else interpret
     m, words = sig.shape
-    bi = min(block_i, m)
+    bi = resolve_block_i(m, window, block_i)
     pad = (-m) % bi
     if pad:
         sig = jnp.pad(sig, ((0, pad), (0, 0)))
     tiles = jaccard_band_tiles(sig, window=window, block_i=bi,
                                interpret=interpret)
     return band_from_tiles(tiles, window=window, block_i=bi)[:m]
+
+
+@partial(jax.jit, static_argnames=("window", "w_cos", "w_jac", "block_i",
+                                   "interpret"))
+def fused_cheap_band(feat: jax.Array, sig: jax.Array, *, window: int,
+                     w_cos: float, w_jac: float, block_i: int = 256,
+                     interpret: bool = None) -> jax.Array:
+    """Fused cheap-cascade band: (M, F) x (M, W32) -> (M, window) weighted
+    partial score ``w_cos*cosine + w_jac*jaccard`` (unnormalized — the
+    cascade gate in core/window.py compares against a pre-scaled tau).
+
+    Either half is disabled by a zero weight (pass a (M, 1) dummy array for
+    the unused input).  The band is emitted directly by the kernel — no
+    (M, 2*block_i) tile intermediate, no host-side gather."""
+    interpret = default_interpret() if interpret is None else interpret
+    m = feat.shape[0]
+    bi = resolve_block_i(m, window, block_i)
+    pad = (-m) % bi
+    if pad:
+        feat = jnp.pad(feat, ((0, pad), (0, 0)))
+        sig = jnp.pad(sig, ((0, pad), (0, 0)))
+    return fused_band_scores(feat, sig, window=window, w_cos=w_cos,
+                             w_jac=w_jac, block_i=bi, m_valid=m,
+                             interpret=interpret)[:m]
 
 
 @partial(jax.jit,
