@@ -10,6 +10,11 @@ controlled CPU device count, or inline for single-device measurements.
   * band_engine_body     — §5.1: scan vs pallas band engine (matcher FLOPs,
                            wall time, pairs/s) + packed-vs-set host
                            collection — the BENCH_band_engine.json baseline
+  * balance_body         — skew-aware load balancing (ISSUE 3): uniform vs
+                           blocksplit vs pairrange planners on a Zipfian
+                           corpus (imbalance ratio, planned capacity, wall
+                           time, oracle parity) — the BENCH_balance.json
+                           baseline
 """
 from __future__ import annotations
 
@@ -199,6 +204,82 @@ def band_engine_body(n: int = 20_000, w: int = 10, n_keys: int = 2048,
         "set_seconds": t_set,
         "packed_seconds": t_packed,
         "speedup": t_set / max(t_packed, 1e-9),
+    }
+    return out
+
+
+def balance_body(n: int = 6_000, w: int = 10, r: int = 8,
+                 exponent: float = 1.0, n_clusters: int = 256,
+                 dup_frac: float = 0.15, reps: int = 3) -> dict:
+    """Uniform vs blocksplit vs pairrange partition planners on a Zipfian
+    hot-head corpus (the ISSUE 3 acceptance benchmark).
+
+    Per planner: planned/realized comparison-count imbalance (max/mean — the
+    direct parallel-efficiency loss, since wall-clock is the max of
+    per-shard work), the planned per-shard padded capacity (static shapes:
+    every shard PAYS the padded band, so capacity is also the single-device
+    FLOP lever measured by the vmap wall time here), and exact pair-set
+    parity against the uniform planner and the sequential SN oracle."""
+    import jax
+    from repro import api
+    from repro import balance as B
+    from repro.core import sn
+    from repro.data.corpus import zipf_entities
+
+    ents = zipf_entities(0, n, n_clusters=n_clusters, exponent=exponent,
+                         dup_frac=dup_frac)
+    keys = np.asarray(ents["key"])
+    eids = np.asarray(ents["eid"])
+    oracle = sn.sequential_sn_pairs(keys, eids, w)
+    hot_key_count = int(np.bincount(keys).max())
+
+    out = {"n": n, "w": w, "r": r, "exponent": exponent,
+           "n_clusters": n_clusters, "hot_key_count": hot_key_count,
+           "backend": jax.default_backend(), "oracle_pairs": len(oracle),
+           "planners": {}}
+    pairs_by = {}
+    for planner in ["uniform", "blocksplit", "pairrange"]:
+        cfg = api.ERConfig(window=w, variant="repsn", hops=r - 1,
+                           runner="vmap", num_shards=r, partitioner=planner)
+        plan = B.plan_shards(ents, cfg, r)
+        runner = api.VmapRunner(r)
+        runner.resolve(ents, plan, cfg)          # compile + warm
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            res = runner.resolve(ents, plan, cfg)
+        dt = (time.perf_counter() - t0) / reps
+        pairs_by[planner] = res.blocked
+        out["planners"][planner] = {
+            "seconds": dt,
+            "imbalance_planned": plan.imbalance,
+            "imbalance_realized": B.imbalance_ratio(
+                B.realized_comparisons(res.load, w)),
+            "planned_load": [int(x) for x in plan.planned_load],
+            "realized_load": [int(x) for x in res.load],
+            "max_comparisons": int(np.max(plan.planned_comparisons)),
+            "straggler_shard": plan.straggler,
+            "cap_link": plan.cap_link,
+            "band_slots_per_shard": (w - 1) * r * plan.cap_link,
+            "split_routing": plan.dest is not None,
+            "halo_entities": int(np.asarray(plan.halo).sum()),
+            "overflow": res.overflow,
+            "blocked": len(res.blocked),
+            "matched": len(res.matched),
+            "oracle_equal": set(res.blocked) == oracle,
+        }
+    imb = {p: out["planners"][p]["imbalance_planned"]
+           for p in out["planners"]}
+    out["parity"] = {
+        "blocksplit_equals_uniform":
+            pairs_by["blocksplit"] == pairs_by["uniform"],
+        "pairrange_equals_uniform":
+            pairs_by["pairrange"] == pairs_by["uniform"],
+        "all_equal_oracle": all(v["oracle_equal"]
+                                for v in out["planners"].values()),
+    }
+    out["imbalance_reduction"] = {
+        "blocksplit": imb["uniform"] / max(imb["blocksplit"], 1e-9),
+        "pairrange": imb["uniform"] / max(imb["pairrange"], 1e-9),
     }
     return out
 

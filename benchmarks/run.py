@@ -11,6 +11,8 @@ Tables:
   sec52_jobsn_vs_repsn  paper §5.2: JobSN vs RepSN (+ SRP baseline)
   band_engine           §5.1 cascade: scan vs pallas band engine + packed
                         pair collection; writes BENCH_band_engine.json
+  balance               skew-aware planners (uniform/blocksplit/pairrange)
+                        on the Zipfian corpus; writes BENCH_balance.json
   kernels               Pallas band kernels vs jnp oracle (CPU timings)
   dedup_e2e             end-to-end corpus dedup throughput + SN-vs-n^2 factor
   roofline              summary of dry-run roofline terms (needs artifacts)
@@ -100,6 +102,29 @@ def band_engine(quick: bool):
         json.dump(res, f, indent=2)
 
 
+def balance(quick: bool):
+    """Skew-aware load balancing (ISSUE 3): uniform vs blocksplit vs
+    pairrange on the Zipfian corpus; persists BENCH_balance.json (the
+    acceptance record: >= 3x imbalance reduction at n >= 6000, 8 shards,
+    exponent >= 1.0, with exact pair-set parity)."""
+    from benchmarks.bench_sn import balance_body
+    res = balance_body(n=6_000 if quick else 20_000, w=10, r=8,
+                       exponent=1.0, reps=2 if quick else 3)
+    for planner, v in res["planners"].items():
+        _row(f"balance_{planner}", v["seconds"] * 1e6,
+             f"imbalance={v['imbalance_planned']:.2f};"
+             f"cap_link={v['cap_link']};"
+             f"band_slots={v['band_slots_per_shard']};"
+             f"split={v['split_routing']};"
+             f"oracle_equal={v['oracle_equal']}")
+    _row("balance_reduction", 0.0,
+         f"blocksplit={res['imbalance_reduction']['blocksplit']:.1f}x;"
+         f"pairrange={res['imbalance_reduction']['pairrange']:.1f}x;"
+         f"parity={res['parity']['all_equal_oracle']}")
+    with open("BENCH_balance.json", "w") as f:
+        json.dump(res, f, indent=2)
+
+
 def kernels(quick: bool):
     import jax
     import jax.numpy as jnp
@@ -172,6 +197,7 @@ TABLES = {
     "tbl1_fig9_skew": tbl1_fig9_skew,
     "sec52_jobsn_vs_repsn": sec52_jobsn_vs_repsn,
     "band_engine": band_engine,
+    "balance": balance,
     "kernels": kernels,
     "dedup_e2e": dedup_e2e,
     "roofline": roofline,

@@ -23,31 +23,42 @@ Pieces (each importable on its own):
   * results                typed BlockingResult / ERResult / ERMetrics
   * linkage                dual-source (R x S) record linkage: source tags,
                            cross-source band masks, host oracle
+  * repro.balance          skew-aware load balancing: KeyProfile (the
+                           analysis job), partition planners (uniform |
+                           blocksplit | pairrange) producing ShardPlans
+                           with planned loads + exact capacities, reported
+                           back as ERResult.balance
   * facade.resolve/link    glue the above together
 """
 from repro.api.config import ERConfig
 from repro.api.facade import default_bounds, link, make_runner, resolve
 from repro.api.linkage import sequential_link_pairs, tag_sources
-from repro.api.results import (BlockingResult, ERMetrics, ERResult,
-                               pack_pairs, packed_pairs_from_band,
+from repro.api.results import (BalanceMetrics, BlockingResult, ERMetrics,
+                               ERResult, pack_pairs, packed_pairs_from_band,
                                packed_to_frozenset, pairs_from_band,
                                unpack_pairs)
 from repro.api.runners import (Runner, RunnerOutcome, SequentialRunner,
                                ShardMapRunner, VmapRunner, shard_input)
 from repro.api.variants import (available_variants, get_variant,
                                 register_variant)
+from repro.balance import (KeyProfile, ShardPlan, available_partitioners,
+                           get_partitioner, plan_shards, profile_keys,
+                           register_partitioner)
 from repro.core.window import (available_band_engines, get_band_engine,
                                register_band_engine)
 
 __all__ = [
     "ERConfig",
     "resolve", "link", "make_runner", "default_bounds",
-    "BlockingResult", "ERResult", "ERMetrics", "pairs_from_band",
+    "BlockingResult", "ERResult", "ERMetrics", "BalanceMetrics",
+    "pairs_from_band",
     "packed_pairs_from_band", "pack_pairs", "unpack_pairs",
     "packed_to_frozenset",
     "Runner", "RunnerOutcome",
     "SequentialRunner", "VmapRunner", "ShardMapRunner", "shard_input",
     "register_variant", "get_variant", "available_variants",
     "register_band_engine", "get_band_engine", "available_band_engines",
+    "KeyProfile", "ShardPlan", "profile_keys", "plan_shards",
+    "register_partitioner", "get_partitioner", "available_partitioners",
     "tag_sources", "sequential_link_pairs",
 ]

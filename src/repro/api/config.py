@@ -14,7 +14,11 @@ from repro.core.match import CascadeMatcher, default_matcher
 
 VARIANTS = ("srp", "repsn", "jobsn")
 RUNNERS = ("sequential", "vmap", "shard_map")
-PARTITIONERS = ("balanced", "range", "sample")
+# legacy boundary derivations + the repro.balance planner registry
+# (uniform | blocksplit | pairrange — profile-backed ShardPlans with
+# planned comparison counts, rank-granular splits, and exact capacities)
+PARTITIONERS = ("balanced", "range", "sample",
+                "uniform", "blocksplit", "pairrange")
 BAND_ENGINES = ("scan", "pallas")
 
 
@@ -53,8 +57,15 @@ class ERConfig:
                    named-axis shards) | "shard_map" (real device mesh)
       num_shards   r for sequential/vmap runners (shard_map takes r from
                    its mesh axis)
-      partitioner  how default boundaries are derived from the data:
-                   "balanced" | "range" | "sample" (explicit ``bounds``
+      partitioner  how shard boundaries are planned from the data:
+                   legacy "balanced" | "range" | "sample" (key bounds
+                   only), or the repro.balance planners "uniform"
+                   (even key-space baseline) | "blocksplit" (greedy
+                   comparison-count balance over key blocks, splitting
+                   oversized blocks) | "pairrange" (equal SN pair-space
+                   ranges) — planner names produce a full ShardPlan with
+                   planned per-shard loads, rank-granular routing, and
+                   exact padded capacities (explicit ``bounds``/ShardPlans
                    passed to resolve() always win)
 
     Scenario:
@@ -89,8 +100,14 @@ class ERConfig:
             raise ValueError(f"unknown runner {self.runner!r}; "
                              f"choose from {RUNNERS}")
         if self.partitioner not in PARTITIONERS:
-            raise ValueError(f"unknown partitioner {self.partitioner!r}; "
-                             f"choose from {PARTITIONERS}")
+            # planners registered via repro.balance.register_partitioner are
+            # first-class citizens of the config surface
+            from repro.balance.planners import available_partitioners
+            if self.partitioner not in available_partitioners():
+                raise ValueError(
+                    f"unknown partitioner {self.partitioner!r}; choose from "
+                    f"{PARTITIONERS} or a registered planner "
+                    f"({available_partitioners()})")
         if self.num_shards < 1:
             raise ValueError(f"num_shards must be >= 1, got {self.num_shards}")
         if self.band_engine not in BAND_ENGINES:

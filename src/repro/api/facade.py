@@ -3,17 +3,26 @@ results together.
 
     res = api.resolve(ents, api.ERConfig(variant="jobsn", runner="vmap"))
     linked = api.link(ents_r, ents_s, api.ERConfig(window=6))
+
+Shard boundaries come from the ``repro.balance`` planning subsystem:
+``cfg.partitioner`` names either a legacy boundary derivation (balanced |
+range | sample) or a profile-backed planner (uniform | blocksplit |
+pairrange), and ``resolve`` builds the ``ShardPlan`` automatically —
+profile -> plan -> execute, with planned-vs-realized load reported on
+``ERResult.balance``.  Explicit ``bounds`` (a raw array or a prebuilt
+ShardPlan) always win.
 """
 from __future__ import annotations
 
 import numpy as np
 
+from repro import balance as B
 from repro.api import linkage as LK
 from repro.api.config import ERConfig
-from repro.api.results import (BlockingResult, ERResult, compute_metrics)
+from repro.api.results import (BalanceMetrics, BlockingResult, ERResult,
+                               compute_metrics)
 from repro.api.runners import (Runner, SequentialRunner, ShardMapRunner,
                                VmapRunner)
-from repro.core import partition as P
 from repro.core import sn
 
 
@@ -29,19 +38,13 @@ def make_runner(cfg: ERConfig, *, mesh=None, axis: str = "data") -> Runner:
 
 
 def default_bounds(ents: dict, cfg: ERConfig, r: int):
-    """Derive partition boundaries per ``cfg.partitioner`` from the data."""
-    valid = np.asarray(ents["valid"])
-    keys = np.asarray(ents["key"])[valid]
-    if keys.size == 0:
-        return P.manual_partition(range(1, r)) if r > 1 else \
-            P.manual_partition([])
-    if cfg.partitioner == "balanced":
-        return P.balanced_partition(keys, r)
-    if cfg.partitioner == "range":
-        return P.range_partition(int(keys.max()) + 1, r)
-    if cfg.partitioner == "sample":
-        return P.sample_partition(np.sort(keys), r)
-    raise ValueError(f"unknown partitioner {cfg.partitioner!r}")
+    """Derive partition boundaries per ``cfg.partitioner`` from the data.
+
+    Kept as the key-bounds view of ``balance.plan_shards``; rank-granular
+    planners (blocksplit splits, pairrange) carry per-entity routing that a
+    bare boundary array cannot express — pass the ShardPlan itself to
+    ``resolve(..., bounds=plan)`` to preserve it."""
+    return B.plan_shards(ents, cfg, r).bounds
 
 
 def _total_comparisons(ents: dict, cfg: ERConfig) -> int:
@@ -68,25 +71,59 @@ def _host_oracle(ents: dict, cfg: ERConfig):
     return sn.sequential_sn_pairs(keys, eids, cfg.window)
 
 
+def _balance_metrics(plan: B.ShardPlan, out, window: int):
+    """Planned vs realized shard load (both sides through the one cost
+    model in ``balance.planners``)."""
+    if plan.planned_comparisons is None:
+        return None
+    realized_comp = B.realized_comparisons(out.load, window)
+    return BalanceMetrics(
+        partitioner=plan.partitioner,
+        planned_load=tuple(int(x) for x in plan.planned_load),
+        realized_load=tuple(int(x) for x in out.load),
+        planned_comparisons=tuple(int(x) for x in plan.planned_comparisons),
+        realized_comparisons=tuple(int(x) for x in realized_comp),
+        imbalance_planned=plan.imbalance,
+        imbalance_realized=B.imbalance_ratio(realized_comp),
+        straggler_shard=int(np.argmax(realized_comp)),
+        halo_entities=int(np.asarray(plan.halo).sum()),
+        cap_link=plan.cap_link)
+
+
 def resolve(ents: dict, cfg: ERConfig, *, bounds=None, mesh=None,
             axis: str = "data") -> ERResult:
     """Run the configured ER pipeline over one entity set.
 
-    ``bounds``: explicit partition boundaries ((r-1,) int32); derived from
-    ``cfg.partitioner`` when omitted.  ``mesh``/``axis`` only matter for the
-    shard_map runner (default: all local devices on a 1-D mesh)."""
+    ``bounds``: explicit partition boundaries ((r-1,) int32) or a
+    ``repro.balance.ShardPlan``; planned from ``cfg.partitioner`` when
+    omitted.  ``mesh``/``axis`` only matter for the shard_map runner
+    (default: all local devices on a 1-D mesh)."""
     runner = make_runner(cfg, mesh=mesh, axis=axis)
+    n_valid = int(np.asarray(ents["valid"]).sum())
     if bounds is None:
-        bounds = default_bounds(ents, cfg, runner.shards)
-    elif cfg.runner != "sequential" and \
-            int(np.asarray(bounds).shape[0]) + 1 != runner.shards:
-        # SRP routes each entity to partition index == shard index; a
-        # mismatch would silently drop everything past the last shard.
-        raise ValueError(
-            f"bounds define {int(np.asarray(bounds).shape[0]) + 1} "
-            f"partitions but the {runner.name} runner has {runner.shards} "
-            f"shards")
-    out = runner.resolve(ents, bounds, cfg)
+        if 0 < n_valid < runner.shards:
+            # planning more shards than entities: every extra shard is
+            # guaranteed empty and halo-hop assumptions quietly break
+            raise ValueError(
+                f"num_shards={runner.shards} exceeds the entity count "
+                f"({n_valid} valid entities); lower num_shards (or shrink "
+                f"the mesh) so every shard can hold at least one entity")
+        plan = B.plan_shards(ents, cfg, runner.shards)
+    else:
+        plan = B.as_plan(bounds)
+        if cfg.runner != "sequential" and plan.num_shards != runner.shards:
+            # SRP routes each entity to partition index == shard index; a
+            # mismatch would silently drop everything past the last shard.
+            raise ValueError(
+                f"bounds define {plan.num_shards} partitions but the "
+                f"{runner.name} runner has {runner.shards} shards")
+        # the sequential runner takes its partition count from the plan, so
+        # validate against that (cfg.num_shards is not used there)
+        if 0 < n_valid < plan.num_shards:
+            raise ValueError(
+                f"bounds define {plan.num_shards} partitions but only "
+                f"{n_valid} valid entities exist; use fewer partitions")
+    out = runner.resolve(ents, plan, cfg)
 
     blocking = BlockingResult(pairs=out.blocked, load=out.load,
                               overflow=out.overflow, variant=cfg.variant,
@@ -95,17 +132,23 @@ def resolve(ents: dict, cfg: ERConfig, *, bounds=None, mesh=None,
                               cand_count=out.cand_count,
                               cand_overflow=out.cand_overflow,
                               matcher_evals=out.matcher_evals)
+    balance = _balance_metrics(plan, out, cfg.window)
     metrics = None
     if cfg.compute_metrics:
+        from dataclasses import replace
+
         from repro.api.variants import get_variant
         if cfg.runner == "sequential" and \
                 get_variant(cfg.variant).boundary_complete:
             oracle = set(out.blocked)     # already the full SN oracle
         else:
             oracle = _host_oracle(ents, cfg)
-        metrics = compute_metrics(out.blocked, oracle,
-                                  _total_comparisons(ents, cfg))
-    return ERResult(blocking=blocking, matches=out.matched, metrics=metrics)
+        metrics = replace(
+            compute_metrics(out.blocked, oracle,
+                            _total_comparisons(ents, cfg)),
+            balance=balance)
+    return ERResult(blocking=blocking, matches=out.matched, metrics=metrics,
+                    balance=balance)
 
 
 def link(lhs: dict, rhs: dict, cfg: ERConfig, *, bounds=None, mesh=None,
@@ -124,4 +167,4 @@ def link(lhs: dict, rhs: dict, cfg: ERConfig, *, bounds=None, mesh=None,
         cand_overflow=b.cand_overflow, matcher_evals=b.matcher_evals)
     return ERResult(blocking=blocking,
                     matches=frozenset(LK.untag_pairs(res.matches, offset)),
-                    metrics=res.metrics)
+                    metrics=res.metrics, balance=res.balance)

@@ -63,17 +63,49 @@ class CollectedPairs(NamedTuple):
 
 
 @dataclass(frozen=True)
+class BalanceMetrics:
+    """Planned vs realized per-shard load under a ``repro.balance``
+    ShardPlan (the skew telemetry of ISSUE 3: wall-clock is the MAX of
+    per-shard matcher work, so the imbalance ratio max/mean is the direct
+    parallel-efficiency loss).
+
+    planned_*            what the partition planner promised (profile-based)
+    realized_*           what the run delivered (post-shuffle valid counts;
+                         comparisons re-derived through the window cost
+                         model from the realized contiguous rank layout)
+    imbalance_*          max/mean of per-shard comparison counts (1.0 =
+                         perfectly level)
+    straggler_shard      shard id with the largest realized comparison load
+    halo_entities        total entities replicated across boundaries
+    cap_link             planned per-(mapper, dest) shuffle capacity
+                         (None: capacity derived from cfg.cap_factor)
+    """
+    partitioner: str
+    planned_load: Tuple[int, ...]
+    realized_load: Tuple[int, ...]
+    planned_comparisons: Tuple[int, ...]
+    realized_comparisons: Tuple[int, ...]
+    imbalance_planned: float
+    imbalance_realized: float
+    straggler_shard: int
+    halo_entities: int
+    cap_link: Optional[int] = None
+
+
+@dataclass(frozen=True)
 class ERMetrics:
     """Blocking quality vs the sequential-SN oracle (the standard blocking
     metrics; the paper reports |B| and completeness of the variants).
 
     reduction_ratio     1 - |blocked| / |all comparable pairs|
     pairs_completeness  |blocked ∩ oracle| / |oracle|
+    balance             planned-vs-realized shard load (profile-backed runs)
     """
     reduction_ratio: float
     pairs_completeness: float
     oracle_pairs: int
     total_comparisons: int
+    balance: Optional[BalanceMetrics] = None
 
 
 @dataclass(frozen=True)
@@ -101,10 +133,15 @@ class BlockingResult:
 
 @dataclass(frozen=True)
 class ERResult:
-    """Full entity-resolution outcome: blocking + matching (+ metrics)."""
+    """Full entity-resolution outcome: blocking + matching (+ metrics).
+
+    ``balance`` is populated whenever the run executed under a profile-
+    backed ShardPlan (any ``cfg.partitioner`` default-bounds run); runs on
+    explicit raw bounds have no plan to compare against and carry None."""
     blocking: BlockingResult
     matches: FrozenSet[Pair]        # matcher-accepted pairs
     metrics: Optional[ERMetrics] = None
+    balance: Optional[BalanceMetrics] = None
 
     @property
     def pairs(self) -> FrozenSet[Pair]:

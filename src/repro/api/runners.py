@@ -14,6 +14,13 @@ returns a ``RunnerOutcome`` with identical semantics, so callers (and the
 facade) never branch on the execution substrate.  The device runners also
 expose ``run_raw`` returning the stacked per-shard output dict (band masks,
 halos, scores) for benchmarks and invariant tests.
+
+``bounds`` may be a raw (r-1,) boundary array OR a ``repro.balance``
+ShardPlan — plans additionally carry rank-granular per-entity routing
+(attached as a ``_dest`` payload tag consumed by ``srp.srp_shard``) and the
+planned shuffle capacity (used when ``cfg.cap_factor`` doesn't override it),
+so every variant x runner x band-engine combination executes planner output
+with zero call-site changes.
 """
 from __future__ import annotations
 
@@ -29,9 +36,31 @@ import numpy as np
 from repro.api import linkage as LK
 from repro.api import results as RES
 from repro.api.variants import get_variant
+from repro.balance.planners import as_plan
 from repro.core import entities as E
 
 Pair = Tuple[int, int]
+
+
+def _apply_plan(ents: dict, bounds, r: int, cfg):
+    """Normalize (bounds | ShardPlan) for a device runner: returns
+    (ents_with_routing, bounds_array, cap_link).  A partition count other
+    than the runner's shard count is rejected — entities routed past the
+    last shard would be dropped by ``bucketize`` WITHOUT being counted as
+    overflow (its accounting only covers dest < r)."""
+    plan = as_plan(bounds)
+    if plan.num_shards != r:
+        raise ValueError(
+            f"plan defines {plan.num_shards} partitions but the runner has "
+            f"{r} shards")
+    if plan.dest is not None:
+        ents = dict(ents)
+        ents["payload"] = dict(ents["payload"],
+                               _dest=jnp.asarray(plan.dest, jnp.int32))
+    # explicit cap_factor keeps its historical override (overflow stays an
+    # accounted outcome); otherwise the planner's exact capacity applies
+    cap_link = plan.cap_link if cfg.cap_factor <= 0 else None
+    return ents, jnp.asarray(plan.bounds, jnp.int32), cap_link
 
 
 class RunnerOutcome(NamedTuple):
@@ -110,9 +139,9 @@ class VmapRunner:
     def run_raw(self, ents: dict, bounds, cfg) -> dict:
         r = self.num_shards
         variant = get_variant(cfg.variant)
-        fn = partial(variant.shard_program,
-                     bounds=jnp.asarray(bounds, jnp.int32), r=r, axis="sn",
-                     cfg=cfg)
+        ents, b, cap_link = _apply_plan(ents, bounds, r, cfg)
+        fn = partial(variant.shard_program, bounds=b, r=r, axis="sn",
+                     cfg=cfg, cap_link=cap_link)
         return jax.vmap(fn, axis_name="sn")(shard_input(ents, r))
 
     def resolve(self, ents: dict, bounds, cfg) -> RunnerOutcome:
@@ -148,10 +177,10 @@ class ShardMapRunner:
         mesh, axis = self.mesh, self.axis
         r = int(mesh.shape[axis])
         variant = get_variant(cfg.variant)
+        ents, b, cap_link = _apply_plan(ents, bounds, r, cfg)
         stacked = shard_input(ents, r)
-        fn = partial(variant.shard_program,
-                     bounds=jnp.asarray(bounds, jnp.int32), r=r, axis=axis,
-                     cfg=cfg)
+        fn = partial(variant.shard_program, bounds=b, r=r, axis=axis,
+                     cfg=cfg, cap_link=cap_link)
 
         def body(stacked_local):
             # stacked_local: (1, cap0, ...) — this shard's mapper partition
@@ -186,20 +215,22 @@ class SequentialRunner:
         return self.num_shards
 
     def resolve(self, ents: dict, bounds, cfg) -> RunnerOutcome:
-        bounds = np.asarray(bounds)
-        r = int(bounds.shape[0]) + 1
+        plan = as_plan(bounds)
+        bounds = np.asarray(plan.bounds)
+        r = plan.num_shards
         valid = np.asarray(ents["valid"])
         keys = np.asarray(ents["key"])[valid]
         eids = np.asarray(ents["eid"])[valid]
+        # partition ids under the plan (rank-granular when it carries dest)
+        part = plan.assignment(np.asarray(ents["key"]), valid)
 
         blocked = RES.pack_pair_set(get_variant(cfg.variant).sequential_pairs(
-            keys, eids, bounds, cfg.window))
+            keys, eids, bounds, cfg.window, part=part))
         if getattr(cfg, "linkage", False) and "src" in ents["payload"]:
             src = np.asarray(ents["payload"]["src"])[valid]
             blocked = LK.filter_cross_source_packed(blocked, eids, src)
         matched = self._match(ents, blocked, cfg)
 
-        part = np.searchsorted(bounds, keys, side="left")
         load = tuple(np.bincount(part, minlength=r).astype(int).tolist())
         return RunnerOutcome(blocked=RES.packed_to_frozenset(blocked),
                              matched=RES.packed_to_frozenset(matched),

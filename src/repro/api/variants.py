@@ -2,15 +2,19 @@
 
 Each variant owns three hooks:
 
-  * ``shard_program(ents, bounds, r, axis, cfg)``  the per-shard collective
-    program (runs under vmap-with-axis-name or shard_map); returns a dict of
-    per-shard outputs with at least ``overflow``, ``load`` and one or more
-    band parts (``main``, optionally ``boundary``)
+  * ``shard_program(ents, bounds, r, axis, cfg, cap_link=None)``  the
+    per-shard collective program (runs under vmap-with-axis-name or
+    shard_map); returns a dict of per-shard outputs with at least
+    ``overflow``, ``load`` and one or more band parts (``main``, optionally
+    ``boundary``).  ``cap_link`` is the planner-provided shuffle capacity
+    (repro.balance ShardPlan); None derives it from ``cfg.cap_factor``.
   * ``collect(out)``  turn the stacked runner output into host pair sets
     (blocked + matched), deduplicating across parts
-  * ``sequential_pairs(keys, eids, bounds, w)``  the HOST oracle with this
-    variant's semantics (SRP: per-partition windows — boundary pairs are
-    missed by design; RepSN/JobSN: the complete sequential SN pair set)
+  * ``sequential_pairs(keys, eids, bounds, w, part=None)``  the HOST oracle
+    with this variant's semantics (SRP: per-partition windows — boundary
+    pairs are missed by design; RepSN/JobSN: the complete sequential SN
+    pair set).  ``part`` carries per-entity shard ids from a rank-granular
+    ShardPlan; the sequential runner always passes it.
 
 New variants register with ``@register_variant("name")`` — no dispatch code
 anywhere else changes (this replaces the old if/elif in pipeline.sn_shard).
@@ -65,10 +69,13 @@ class VariantBase:
     # -- device side ---------------------------------------------------------
 
     def shard_program(self, ents: dict, bounds: jax.Array, r: int,
-                      axis: str, cfg) -> dict:
+                      axis: str, cfg, cap_link: int = None) -> dict:
+        # capacity precedence: planner-provided cap_link (exact, from the
+        # ShardPlan) > cfg.cap_factor > full capacity (never overflows)
         cap0 = ents["key"].shape[0]
-        cap_link = cap0 if cfg.cap_factor <= 0 else \
-            max(1, int(np.ceil(cap0 * cfg.cap_factor / r)))
+        if cap_link is None:
+            cap_link = cap0 if cfg.cap_factor <= 0 else \
+                max(1, int(np.ceil(cap0 * cfg.cap_factor / r)))
         if self.halo_slices and cfg.window - 1 > r * cap_link:
             raise ValueError(
                 f"variant {self.name!r} slices w-1 boundary slots per "
@@ -111,9 +118,13 @@ class VariantBase:
                                   matched=dedup(matched))
 
     def sequential_pairs(self, keys: np.ndarray, eids: np.ndarray,
-                         bounds: np.ndarray, w: int) -> Set[Tuple[int, int]]:
+                         bounds: np.ndarray, w: int,
+                         part: np.ndarray = None) -> Set[Tuple[int, int]]:
         """Host oracle with this variant's semantics (boundary-complete
-        variants return the full sequential SN pair set)."""
+        variants return the full sequential SN pair set).  ``part``: per-
+        entity shard ids from a rank-granular ShardPlan — overrides the
+        key->shard map for variants whose pair set depends on the
+        partitioning (SRP)."""
         return sn.sequential_sn_pairs(keys, eids, w)
 
 
@@ -127,8 +138,9 @@ class SrpVariant(VariantBase):
     def _windows(self, sorted_ents, r, axis, cfg):
         return {"main": self._band(sorted_ents, 0, "all", cfg)}
 
-    def sequential_pairs(self, keys, eids, bounds, w):
-        part = np.searchsorted(np.asarray(bounds), keys, side="left")
+    def sequential_pairs(self, keys, eids, bounds, w, part=None):
+        if part is None:
+            part = np.searchsorted(np.asarray(bounds), keys, side="left")
         pairs: Set[Tuple[int, int]] = set()
         for p in np.unique(part):
             sel = part == p

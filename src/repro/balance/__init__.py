@@ -1,0 +1,39 @@
+"""``repro.balance`` — skew-aware load balancing for parallel SN.
+
+The three-layer subsystem of ISSUE 3 (after Kolb, Thor & Rahm,
+arXiv:1108.1631, adapted to sorted-neighborhood contiguity and static-shape
+shard programs):
+
+  1. **profile** — the "analysis job": one device pass over the sort keys
+     producing a ``KeyProfile`` (per-key-block entity counts, window-induced
+     comparison counts, halo/replication cost per candidate boundary).
+  2. **plan** — ``Partitioner`` strategies (uniform | blocksplit |
+     pairrange, plus the legacy balanced | range | sample) turn a profile
+     into a ``ShardPlan``: shard boundaries (key bounds or rank-granular
+     per-entity routing for split key blocks), planned per-shard loads /
+     comparison counts, and exact padded capacities.
+  3. **execute** — every runner accepts a ShardPlan wherever it accepts raw
+     bounds (``repro.api.resolve`` builds one from ``ERConfig.partitioner``
+     automatically), and results report planned vs realized load via
+     ``ERResult.balance``.
+
+    from repro import api, balance
+    plan = balance.plan_shards(ents, cfg, r=8)
+    plan.imbalance                  # planned max/mean comparison ratio
+    api.resolve(ents, cfg, bounds=plan)
+"""
+from repro.balance.planners import (LEGACY_PARTITIONERS, Partitioner,
+                                    ShardPlan, as_plan,
+                                    available_partitioners, get_partitioner,
+                                    imbalance_ratio, plan_shards,
+                                    realized_comparisons,
+                                    register_partitioner)
+from repro.balance.profile import KeyProfile, profile_keys
+
+__all__ = [
+    "KeyProfile", "profile_keys",
+    "ShardPlan", "Partitioner", "plan_shards", "as_plan",
+    "register_partitioner", "get_partitioner", "available_partitioners",
+    "imbalance_ratio", "realized_comparisons",
+    "LEGACY_PARTITIONERS",
+]

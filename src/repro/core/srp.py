@@ -73,8 +73,23 @@ def srp_shard(ents: dict, bounds: jax.Array, r: int, axis: str,
               cap_link: int) -> Tuple[dict, jax.Array]:
     """Full SRP for one mapper shard: returns (sorted reduce partition,
     global overflow count).  The result's shard index == partition index
-    (monotone p => shard-local sort == global range sort)."""
-    dest = P.shard_of(bounds, ents["key"])
+    (monotone p => shard-local sort == global range sort).
+
+    A ``_dest`` payload field (attached by the runners from a rank-granular
+    ``repro.balance`` ShardPlan) overrides the key->shard partition function:
+    it lets a planner split an oversized key block across shards while
+    staying monotone in the global (key, eid) sort order, so the sorted-
+    reduce-partition invariant — and every downstream window/halo step —
+    holds unchanged.  The tag is consumed map-side and stripped before the
+    shuffle (nothing reads it after routing; keeping it would waste
+    all_to_all bandwidth and halo-permute bytes)."""
+    dest = ents["payload"].get("_dest")
+    if dest is None:
+        dest = P.shard_of(bounds, ents["key"])
+    else:
+        ents = dict(ents)
+        ents["payload"] = {k: v for k, v in ents["payload"].items()
+                           if k != "_dest"}
     buf, overflow = bucketize(ents, dest, r, cap_link)
     recv = exchange(buf, r, axis)
     sorted_ents = E.sort_entities(recv)

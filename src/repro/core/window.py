@@ -37,6 +37,7 @@ from typing import Dict, Optional, Tuple, Type
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.match import CascadeMatcher
 
@@ -164,6 +165,42 @@ def score_candidates(ents: dict, cand_i, cand_d, cand_valid,
 
 def band_pair_count(mask: jax.Array) -> jax.Array:
     return jnp.sum(mask.astype(jnp.int32))
+
+
+# -- window comparison cost model (host-side; the balance subsystem's oracle) -------
+#
+# Under the band layout every SN pair (i-d, i) is OWNED by its later element
+# i (RepSN mode="native": pairs whose later element is native to the shard),
+# so the entity at global sorted rank i contributes exactly min(i, w-1)
+# comparisons to whichever shard it lands on.  Contiguous rank ranges then
+# have a closed-form comparison count — the cost model `repro.balance` plans
+# against.
+
+def rank_prefix_comparisons(rank, w: int) -> np.ndarray:
+    """Closed-form sum of the per-rank marginal cost min(i, w-1) over ranks
+    i < rank: the total SN pairs among the first ``rank`` sorted entities.
+    Vectorized; equals ``sn.expected_pair_count(rank, w)``."""
+    r = np.asarray(rank, np.int64)
+    ramp = np.minimum(r, w - 1)
+    return ramp * (ramp - 1) // 2 + np.maximum(r - (w - 1), 0) * (w - 1)
+
+
+def rank_for_prefix_comparisons(target: float, w: int) -> int:
+    """Inverse of ``rank_prefix_comparisons``: the smallest rank whose prefix
+    comparison count reaches ``target`` (the pair-space -> rank-space map the
+    pairrange planner and blocksplit's mid-block splits use)."""
+    wm1 = w - 1
+    if target <= 0:
+        return 0
+    tri = wm1 * (wm1 - 1) // 2                 # prefix at rank w-1
+    if target <= tri:
+        e = int(np.ceil((1.0 + np.sqrt(1.0 + 8.0 * float(target))) / 2.0))
+        while e * (e - 1) // 2 < target:       # guard float rounding
+            e += 1
+        while e > 0 and (e - 1) * (e - 2) // 2 >= target:
+            e -= 1
+        return e
+    return wm1 + int(np.ceil((float(target) - tri) / wm1))
 
 
 # -- band engines -------------------------------------------------------------------

@@ -1,0 +1,279 @@
+"""Planner invariants for the repro.balance subsystem (ISSUE 3).
+
+  * the profile (analysis job) reproduces the closed-form SN pair counts
+  * every entity is assigned to exactly one shard by every planner
+  * plans are deterministic functions of the profile
+  * halo/boundary pairs are never lost vs the sequential oracle — every
+    planner, scan AND pallas band engines
+  * rank-granular (dest) plans keep SRP's parallel/sequential semantics
+    aligned, and blocksplit actually splits an oversized key block
+  * overflow stays an ACCOUNTED outcome when an explicit cap_factor beats
+    the planned capacity; configurations that would silently truncate a
+    halo are rejected with actionable errors
+"""
+import numpy as np
+import pytest
+
+from repro import api
+from repro import balance as B
+from repro.core import sn
+from repro.data.corpus import zipf_entities
+
+N, R, W = 1400, 8, 8
+PLANNERS = ["uniform", "blocksplit", "pairrange"]
+
+
+@pytest.fixture(scope="module")
+def ents():
+    return zipf_entities(7, N, n_clusters=64, exponent=1.1, dup_frac=0.25)
+
+
+@pytest.fixture(scope="module")
+def oracle(ents):
+    keys = np.asarray(ents["key"])
+    eids = np.asarray(ents["eid"])
+    return sn.sequential_sn_pairs(keys, eids, W)
+
+
+def _cfg(**kw):
+    kw.setdefault("window", W)
+    kw.setdefault("num_shards", R)
+    kw.setdefault("variant", "repsn")
+    kw.setdefault("hops", R - 1)
+    kw.setdefault("runner", "vmap")
+    return api.ERConfig(**kw)
+
+
+def test_profile_matches_closed_form(ents):
+    keys = np.asarray(ents["key"])
+    prof = B.profile_keys(keys, window=W)
+    assert prof.n == N
+    assert int(prof.counts.sum()) == N
+    assert prof.total_comparisons == sn.expected_pair_count(N, W)
+    assert (np.diff(prof.uniq) > 0).all()
+    assert (np.diff(prof.cum_entities) > 0).all()
+    np.testing.assert_array_equal(prof.halo_cost,
+                                  np.minimum(prof.cum_entities, W - 1))
+    # per-block comparisons sum back to the total and are all non-negative
+    assert int(prof.block_comparisons.sum()) == prof.total_comparisons
+    assert (prof.block_comparisons >= 0).all()
+
+
+@pytest.mark.parametrize("planner", PLANNERS + ["balanced"])
+def test_every_entity_assigned_exactly_once(ents, planner):
+    plan = B.plan_shards(ents, _cfg(partitioner=planner), R)
+    assign = plan.assignment(np.asarray(ents["key"]),
+                             np.asarray(ents["valid"]))
+    assert assign.shape == (N,)
+    assert assign.min() >= 0 and assign.max() < R
+    counts = np.bincount(assign, minlength=R)
+    assert counts.sum() == N
+    if plan.planned_load is not None:
+        np.testing.assert_array_equal(counts, plan.planned_load)
+        assert int(plan.planned_comparisons.sum()) == \
+            sn.expected_pair_count(N, W)
+    # monotone in the global (key, eid) sort: shard ids never decrease
+    keys = np.asarray(ents["key"])
+    eids = np.asarray(ents["eid"])
+    order = np.lexsort((eids, keys))
+    assert (np.diff(assign[order]) >= 0).all()
+
+
+@pytest.mark.parametrize("planner", PLANNERS)
+def test_plans_deterministic(ents, planner):
+    a = B.plan_shards(ents, _cfg(partitioner=planner), R)
+    b = B.plan_shards(ents, _cfg(partitioner=planner), R)
+    np.testing.assert_array_equal(a.bounds, b.bounds)
+    np.testing.assert_array_equal(a.rank_bounds, b.rank_bounds)
+    np.testing.assert_array_equal(a.planned_load, b.planned_load)
+    assert a.cap_link == b.cap_link
+    if a.dest is None:
+        assert b.dest is None
+    else:
+        np.testing.assert_array_equal(a.dest, b.dest)
+
+
+def test_balance_planners_beat_uniform(ents):
+    imb = {p: B.plan_shards(ents, _cfg(partitioner=p), R).imbalance
+           for p in PLANNERS}
+    # Zipfian hot-head corpus: uniform key ranges pile work on shard 0
+    assert imb["uniform"] > 3.0 * imb["blocksplit"]
+    assert imb["uniform"] > 3.0 * imb["pairrange"]
+    assert imb["pairrange"] < 1.1
+
+
+@pytest.mark.parametrize("engine", ["scan", "pallas"])
+@pytest.mark.parametrize("planner", PLANNERS)
+def test_no_pairs_lost_vs_oracle(ents, oracle, planner, engine):
+    """Halo/boundary pairs are never lost: every planner x band engine
+    reproduces the sequential SN oracle exactly (repsn, hops=r-1)."""
+    cfg = _cfg(partitioner=planner, band_engine=engine,
+               band_interpret=True if engine == "pallas" else None)
+    res = api.resolve(ents, cfg)
+    assert set(res.blocking.pairs) == oracle, (planner, engine)
+    assert res.blocking.overflow == 0
+    assert res.balance is not None
+    assert res.balance.realized_load == res.balance.planned_load
+
+
+def test_engines_agree_on_matches(ents):
+    cfg = _cfg(partitioner="blocksplit")
+    scan = api.resolve(ents, cfg)
+    pal = api.resolve(ents, cfg.with_(band_engine="pallas",
+                                      band_interpret=True))
+    assert pal.blocking.pairs == scan.blocking.pairs
+    assert pal.matches == scan.matches
+
+
+def test_srp_plan_parity_vmap_vs_sequential(ents):
+    """Rank-granular plans change WHICH pairs SRP misses; parallel and
+    sequential runs must still agree when given the same plan."""
+    cfg = _cfg(variant="srp", partitioner="pairrange")
+    plan = B.plan_shards(ents, cfg, R)
+    assert plan.dest is not None
+    vm = api.resolve(ents, cfg, bounds=plan)
+    seq = api.resolve(ents, cfg.with_(runner="sequential"), bounds=plan)
+    assert vm.blocking.pairs == seq.blocking.pairs
+    assert vm.matches == seq.matches
+
+
+def test_blocksplit_splits_oversized_block():
+    """One key holding ~45% of the corpus: unsplittable by any key-bounds
+    partitioner, so blocksplit must go rank-granular — and still lose
+    nothing vs the oracle."""
+    ents = zipf_entities(3, N, n_clusters=40, exponent=2.2, dup_frac=0.0)
+    keys = np.asarray(ents["key"])
+    hot_count = int(np.bincount(keys).max())
+    assert hot_count > N // R                   # genuinely oversized
+    cfg = _cfg(partitioner="blocksplit")
+    plan = B.plan_shards(ents, cfg, R)
+    assert plan.dest is not None                # a block was split
+    assert plan.planned_comparisons.max() < \
+        B.profile_keys(keys, window=W).block_comparisons.max()
+    res = api.resolve(ents, cfg)
+    want = sn.sequential_sn_pairs(keys, np.asarray(ents["eid"]), W)
+    assert set(res.blocking.pairs) == want
+    # vs the best any key-bounds plan can do, the hot shard is now level
+    bal = B.plan_shards(ents, _cfg(partitioner="balanced"), R)
+    assert plan.imbalance < bal.imbalance
+
+
+def test_overflow_accounted_when_cap_factor_overrides(ents):
+    """Explicit cap_factor beats the planned capacity (historical
+    semantics): a too-tight cap overflows, counted — never silent."""
+    cfg = _cfg(partitioner="blocksplit", variant="srp", cap_factor=0.6)
+    res = api.resolve(ents, cfg)
+    assert res.blocking.overflow > 0
+    assert res.blocking.total_load + res.blocking.overflow == N
+    roomy = api.resolve(ents, cfg.with_(cap_factor=0.0))
+    assert roomy.blocking.overflow == 0
+    assert roomy.blocking.total_load == N
+
+
+def test_planned_capacity_never_overflows(ents):
+    """The plan's cap_link is exact: cap_factor=0 runs under it with zero
+    overflow and a much smaller padded band than the legacy full capacity."""
+    cfg = _cfg(partitioner="pairrange")
+    plan = B.plan_shards(ents, cfg, R)
+    assert plan.cap_link is not None
+    assert R * plan.cap_link >= W - 1           # halo slice stays legal
+    assert R * plan.cap_link < N                # genuinely smaller band
+    res = api.resolve(ents, cfg)
+    assert res.blocking.overflow == 0
+
+
+def test_num_shards_exceeding_entities_rejected():
+    tiny = zipf_entities(0, 5, n_clusters=4, exponent=1.0, dup_frac=0.0)
+    with pytest.raises(ValueError, match="exceeds the entity count"):
+        api.resolve(tiny, _cfg(num_shards=8, hops=7))
+    # the sequential runner takes its partition count from the bounds, not
+    # cfg.num_shards: explicit 2-partition bounds stay valid at any r
+    res = api.resolve(tiny, _cfg(window=3, num_shards=8, hops=1,
+                                 runner="sequential"),
+                      bounds=np.asarray([1 << 18], np.int32))
+    assert sum(res.blocking.load) == 5
+    with pytest.raises(ValueError, match="partitions"):
+        api.resolve(tiny, _cfg(window=3, num_shards=8, hops=1,
+                               runner="sequential"),
+                    bounds=np.arange(1, 8, dtype=np.int32))
+
+
+def test_runner_rejects_mismatched_raw_bounds(ents):
+    """Direct runner calls (bypassing the facade) still catch a partition/
+    shard mismatch — entities routed past the last shard would vanish
+    without even an overflow count."""
+    cfg = _cfg(variant="srp", num_shards=4)
+    with pytest.raises(ValueError, match="partitions"):
+        api.VmapRunner(4).resolve(ents, np.arange(1, 12, dtype=np.int32),
+                                  cfg)
+
+
+def test_halo_truncation_rejected():
+    """A plan whose shards are smaller than the window needs more halo hops
+    than configured — silently losing boundary pairs is rejected."""
+    ents = zipf_entities(1, 40, n_clusters=16, exponent=0.5, dup_frac=0.0)
+    with pytest.raises(ValueError, match="hops"):
+        api.resolve(ents, _cfg(window=12, num_shards=8, hops=1,
+                               partitioner="pairrange"))
+    # the suggested fix works and loses nothing
+    res = api.resolve(ents, _cfg(window=12, num_shards=8, hops=7,
+                                 partitioner="pairrange"))
+    want = sn.sequential_sn_pairs(np.asarray(ents["key"]),
+                                  np.asarray(ents["eid"]), 12)
+    assert set(res.blocking.pairs) == want
+    # jobsn has no hops lever: tiny interior shards are rejected outright
+    with pytest.raises(ValueError, match="jobsn|JobSN"):
+        api.resolve(ents, _cfg(window=12, num_shards=8, variant="jobsn",
+                               partitioner="pairrange"))
+    # legacy partitioners are profile-backed too: the same silent
+    # truncation is rejected the same way
+    with pytest.raises(ValueError, match="hops"):
+        api.resolve(ents, _cfg(window=12, num_shards=8, hops=1,
+                               partitioner="balanced"))
+
+
+def test_registered_partitioner_usable_through_config(ents):
+    """The planner registry is a first-class config surface: a custom
+    planner selects through ERConfig like the built-ins."""
+    from repro.balance.planners import _PLANNERS, PairRangePartitioner
+
+    @B.register_partitioner("pairrange_test_alias")
+    class AliasPlanner(PairRangePartitioner):
+        pass
+
+    try:
+        res = api.resolve(ents, _cfg(partitioner="pairrange_test_alias"))
+        ref = api.resolve(ents, _cfg(partitioner="pairrange"))
+        assert res.blocking.pairs == ref.blocking.pairs
+        assert res.balance.planned_load == ref.balance.planned_load
+    finally:
+        _PLANNERS.pop("pairrange_test_alias", None)
+    with pytest.raises(ValueError, match="unknown partitioner"):
+        api.ERConfig(partitioner="pairrange_test_alias")
+
+
+def test_balance_metrics_surface(ents):
+    cfg = _cfg(partitioner="blocksplit", compute_metrics=True)
+    res = api.resolve(ents, cfg)
+    bal = res.balance
+    assert bal is not None and res.metrics.balance is bal
+    assert sum(bal.realized_load) == N
+    assert len(bal.planned_comparisons) == R
+    assert bal.imbalance_realized >= 1.0
+    assert 0 <= bal.straggler_shard < R
+    assert bal.partitioner == "blocksplit"
+    assert res.metrics.pairs_completeness == 1.0
+    # explicit raw bounds carry no plan: no balance telemetry
+    raw = api.resolve(ents, cfg.with_(compute_metrics=False),
+                      bounds=api.default_bounds(ents, cfg, R))
+    assert raw.balance is None
+
+
+def test_explicit_plan_equals_derived(ents):
+    cfg = _cfg(partitioner="blocksplit")
+    plan = B.plan_shards(ents, cfg, R)
+    a = api.resolve(ents, cfg)
+    b = api.resolve(ents, cfg, bounds=plan)
+    assert a.blocking.pairs == b.blocking.pairs
+    assert a.matches == b.matches
+    assert a.balance == b.balance
