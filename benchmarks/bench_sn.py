@@ -3,13 +3,24 @@
 These functions are invoked in subprocesses (benchmarks/_subproc.py) with a
 controlled CPU device count, or inline for single-device measurements.
 
+Timing methodology (ISSUE 4): every body reports ``cold_seconds`` (the
+FIRST call on an empty executable cache — includes trace + compile) and
+``steady_seconds`` (median of >= 5 warm iterations, fully blocked)
+SEPARATELY.  The old single-shot numbers conflated compile time with run
+time, which made the pallas cascade look slower than the scan oracle
+end-to-end; steady-state is what the serving workload pays.  ``seconds``
+stays as an alias of ``steady_seconds`` for downstream readers.
+
   * scalability_body     — Fig. 8: wall time of the full parallel SN pipeline
                            at r shards (real shard_map over r host devices)
   * skew_body            — Fig. 9 / Table 1: runtime + Gini per partitioner
   * jobsn_vs_repsn_body  — §5.2: variant comparison (time + collectives)
-  * band_engine_body     — §5.1: scan vs pallas band engine (matcher FLOPs,
-                           wall time, pairs/s) + packed-vs-set host
-                           collection — the BENCH_band_engine.json baseline
+  * band_engine_body     — §5.1: scan vs pallas band engine with the paper's
+                           full cascade (cheap cosine+jaccard gating an
+                           expensive edit-distance stage), cold/steady wall
+                           time, device-side pair emission transfer bytes,
+                           packed-vs-set host collection — the
+                           BENCH_band_engine.json baseline + perf-smoke gate
   * balance_body         — skew-aware load balancing (ISSUE 3): uniform vs
                            blocksplit vs pairrange planners on a Zipfian
                            corpus (imbalance ratio, planned capacity, wall
@@ -25,29 +36,41 @@ from typing import Optional
 import numpy as np
 
 
-def _setup(n, n_keys, seed=0, skew=0.0):
+def _setup(n, n_keys, seed=0, skew=0.0, text_len=0):
     import jax
     from repro.core import entities as E
     rng = np.random.default_rng(seed)
-    return E.synth_entities(rng, n, n_keys=n_keys, dup_frac=0.2, skew=skew)
+    return E.synth_entities(rng, n, n_keys=n_keys, dup_frac=0.2, skew=skew,
+                            text_len=text_len)
+
+
+def _cold_steady(run, steady_reps=5):
+    """(cold_seconds, steady_seconds, last_result): first call on an empty
+    executable cache vs the median of >= 5 fully-blocked warm calls."""
+    import jax
+    from repro.perf.cache import executable_cache
+    executable_cache().clear()
+    t0 = time.perf_counter()
+    out = jax.block_until_ready(run())
+    cold = time.perf_counter() - t0
+    ts = []
+    for _ in range(max(steady_reps, 5)):
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(run())
+        ts.append(time.perf_counter() - t0)
+    return cold, float(np.median(ts)), out
 
 
 def _time_pipeline(ents, mesh, bounds, cfg, reps=3):
     import jax
     from repro.api import ShardMapRunner
     runner = ShardMapRunner(mesh=mesh, axis="data")
-    run = lambda: runner.run_raw(ents, bounds, cfg)
-    out = run()                              # compile + warm
-    jax.block_until_ready(out["main"]["match"])
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        out = run()
-        jax.block_until_ready(out["main"]["match"])
-    dt = (time.perf_counter() - t0) / reps
+    cold, steady, out = _cold_steady(
+        lambda: runner.run_raw(ents, bounds, cfg), steady_reps=reps)
     n_pairs = int(np.asarray(out["main"]["match"]).sum())
     if "boundary" in out:
         n_pairs += int(np.asarray(out["boundary"]["match"]).sum())
-    return dt, n_pairs, out
+    return cold, steady, n_pairs, out
 
 
 def scalability_body(n: int = 100_000, w: int = 10, n_keys: int = 4096,
@@ -62,7 +85,7 @@ def scalability_body(n: int = 100_000, w: int = 10, n_keys: int = 4096,
     bounds = P.balanced_partition(np.asarray(ents["key"]), r)
     cfg = ERConfig(window=w, variant=variant, cap_factor=3.0,
                    runner="shard_map")
-    dt, n_pairs, out = _time_pipeline(ents, mesh, bounds, cfg, reps)
+    cold, steady, n_pairs, out = _time_pipeline(ents, mesh, bounds, cfg, reps)
     # critical-path model: parallel time ~ max per-shard window work.  This
     # container exposes ONE physical core, so the r "devices" timeshare it
     # and measured wall time stays ~flat; the derived speedup is
@@ -72,7 +95,8 @@ def scalability_body(n: int = 100_000, w: int = 10, n_keys: int = 4096,
     total_work = int(loads.sum()) * (w - 1)
     max_work = int(loads.max()) * (w - 1)
     return {"r": r, "n": n, "w": w, "variant": variant,
-            "seconds": dt, "pairs": n_pairs,
+            "cold_seconds": cold, "steady_seconds": steady,
+            "seconds": steady, "pairs": n_pairs,
             "work_speedup": total_work / max(max_work, 1),
             "max_load": int(loads.max())}
 
@@ -103,66 +127,110 @@ def skew_body(n: int = 60_000, w: int = 20, n_keys: int = 4096,
     g = P.gini(sizes)
     cfg = ERConfig(window=w, variant="repsn", cap_factor=3.0,
                    runner="shard_map")
-    dt, n_pairs, _ = _time_pipeline(ents, mesh, bounds, cfg, reps)
+    cold, steady, n_pairs, _ = _time_pipeline(ents, mesh, bounds, cfg, reps)
     return {"strategy": strategy, "r": r, "gini": round(g, 3),
-            "seconds": dt, "max_load": int(sizes.max()),
+            "cold_seconds": cold, "steady_seconds": steady,
+            "seconds": steady, "max_load": int(sizes.max()),
             "pairs": n_pairs}
 
 
-def band_engine_body(n: int = 20_000, w: int = 10, n_keys: int = 2048,
-                     r: int = 4, variant: str = "repsn", reps: int = 3,
-                     collect_pairs: int = 100_000) -> dict:
-    """Scan vs pallas band engine on the vmap runner (single device).
+def _part_transfer_bytes(part: dict) -> int:
+    """Host bytes a part's pair representation transfers: boolean bands (+
+    the (r, M) eids backing extraction) or emitted index buffers + counts."""
+    if "mask_idx" in part:
+        fields = ["mask_idx", "mask_n", "match_idx", "match_n", "eid"]
+    else:
+        fields = ["mask", "match"]
+    total = sum(np.asarray(part[f]).nbytes for f in fields)
+    if "mask_idx" not in part:
+        total += np.asarray(part["ents"]["eid"]).nbytes
+    return total
 
-    Reports per engine: wall time, expensive-matcher evaluations ACTUALLY
+
+def paper_cascade():
+    """The paper's §3/§5.1 match strategy shape: cheap similarities (cosine
+    on embeddings, Jaccard on trigram signatures) gating an EXPENSIVE
+    edit-distance stage, weighted average, threshold 0.75.  This is the
+    workload where the cascade has a real cost gap — the old bench used the
+    cheap-only default matcher, where "skipping the expensive stage" had
+    nothing to skip."""
+    from repro.core.match import CascadeMatcher, Matcher
+    return CascadeMatcher(matchers=(
+        Matcher(field="feat", kind="cosine", weight=0.25, cost=1.0),
+        Matcher(field="sig", kind="jaccard", weight=0.25, cost=2.0),
+        Matcher(field="text", kind="edit", weight=0.5, cost=10.0),
+    ), threshold=0.75)
+
+
+def band_engine_body(n: int = 20_000, w: int = 10, n_keys: int = 2048,
+                     r: int = 4, variant: str = "repsn", reps: int = 5,
+                     collect_pairs: int = 100_000) -> dict:
+    """Scan vs pallas band engine on the vmap runner (single device), with
+    the paper's full cascade (cosine + jaccard gating edit distance) and
+    device-side pair emission (emit="pairs").
+
+    Reports per engine: cold (first call, trace + compile) and steady
+    (median of >= 5 warm, blocked calls) wall time of the full resolve —
+    device run + host collection; expensive-matcher evaluations ACTUALLY
     run (the §5.1 FLOP lever — scan pays one full cascade per band slot;
-    pallas scores its cand_cap buffer, sized here by the DESIGN.md §6 rule:
+    pallas scores its cand_cap buffer, sized by the DESIGN.md §6 rule:
     probe survivor counts with an unbounded buffer, then cap at ~1.25x the
-    busiest shard so overflow is zero and parity holds), an estimated
-    matcher FLOP count, and pairs/sec.  Off-TPU the pallas kernel runs
-    under the interpreter, so WALL TIME on CPU is a correctness-path
-    number; ``matcher_evals`` is the hardware-independent claim.  Also
-    times host pair collection: packed uint64 (+np.unique) vs the
-    set-of-tuples baseline at ~``collect_pairs`` pairs."""
+    busiest shard so overflow is zero and parity holds); pair-emission
+    capacity/overflow (pair_cap = (w-1) * max shard load: a hard upper
+    bound, zero overflow); and transfer bytes of the band-mask vs
+    packed-index representations.  ``pairs_per_s`` is STEADY-STATE blocked
+    pairs per second — the acceptance metric the perf-smoke CI gate
+    tracks.  Also times host pair collection: packed uint64 (+np.unique)
+    vs the set-of-tuples baseline at ~``collect_pairs`` pairs."""
     import jax
     from repro import api
     from repro.core import partition as P
 
-    ents = _setup(n, n_keys)
+    ents = _setup(n, n_keys, text_len=16)
     bounds = P.balanced_partition(np.asarray(ents["key"]), r)
+    matcher = paper_cascade()
     feat_dim = ents["payload"]["feat"].shape[1]
     sig_words = ents["payload"]["sig"].shape[1]
-    # crude per-evaluation cascade cost: cosine 2F FLOPs + jaccard ~6W ops
-    flops_per_eval = 2 * feat_dim + 6 * sig_words
+    text_len = ents["payload"]["text"].shape[1]
+    # crude per-evaluation cascade cost: cosine 2F + jaccard ~6W + the
+    # edit-distance DP's ~8*L^2 ops — the expensive stage dominates
+    flops_per_eval = 2 * feat_dim + 6 * sig_words + 8 * text_len * text_len
     runner = api.VmapRunner(r)
-
-    def survivors_per_shard(cfg):
-        # the DESIGN.md §6 sizing probe, via the public result surface:
-        # per-shard gate survivors with an unbounded buffer
-        return max(runner.resolve(ents, bounds, cfg).cand_count)
 
     out = {"n": n, "w": w, "r": r, "variant": variant,
            "backend": jax.default_backend(), "engines": {}}
     results = {}
     for engine in ["scan", "pallas"]:
         cfg = api.ERConfig(window=w, variant=variant, hops=r - 1,
-                           runner="vmap", num_shards=r, band_engine=engine)
+                           runner="vmap", num_shards=r, band_engine=engine,
+                           matcher=matcher, emit="pairs")
         cand_cap = 0
         if engine == "pallas":
-            cand_cap = int(survivors_per_shard(
-                cfg.with_(cand_cap=0)) * 1.25) + 16
+            # the DESIGN.md §6 sizing probe, via the public result surface:
+            # per-shard gate survivors with an unbounded buffer
+            probe = runner.resolve(ents, bounds, cfg.with_(cand_cap=0))
+            cand_cap = int(max(probe.cand_count) * 1.25) + 16
             cfg = cfg.with_(cand_cap=cand_cap)
-        raw = runner.run_raw(ents, bounds, cfg)         # compile + warm
-        jax.block_until_ready(raw["main"]["match"])
-        t0 = time.perf_counter()
-        for _ in range(reps):
-            raw = runner.run_raw(ents, bounds, cfg)
-            jax.block_until_ready(raw["main"]["match"])
-        dt = (time.perf_counter() - t0) / reps
-        res = runner.resolve(ents, bounds, cfg)
+        probe = runner.resolve(ents, bounds, cfg)
+        # emitted-buffer capacity: (w-1) pairs per owned slot is a hard
+        # upper bound, so the busiest shard can never overflow it
+        pair_cap = (w - 1) * max(probe.load) + 16
+        cfg = cfg.with_(pair_cap=pair_cap)
+
+        cold, steady, res = _cold_steady(
+            lambda: runner.resolve(ents, bounds, cfg), steady_reps=reps)
         results[engine] = res
+        raw = runner.run_raw(ents, bounds, cfg)
+        raw_band = runner.run_raw(ents, bounds, cfg.with_(emit="band"))
+        transfer_packed = sum(_part_transfer_bytes(raw[p])
+                              for p in ("main", "boundary") if p in raw)
+        transfer_band = sum(_part_transfer_bytes(raw_band[p])
+                            for p in ("main", "boundary") if p in raw_band)
         out["engines"][engine] = {
-            "seconds": dt,
+            "cold_seconds": cold,
+            "steady_seconds": steady,
+            "seconds": steady,
+            "steady_speedup_vs_cold": cold / max(steady, 1e-9),
             "matcher_evals": res.matcher_evals,
             "matcher_flops_est": res.matcher_evals * flops_per_eval,
             "band_slots": (w - 1) * sum(res.load),
@@ -170,13 +238,23 @@ def band_engine_body(n: int = 20_000, w: int = 10, n_keys: int = 2048,
             "cand_count": sum(res.cand_count),
             "cand_count_per_shard": list(res.cand_count),
             "cand_overflow": res.cand_overflow,
+            "pair_cap": pair_cap,
+            "pair_overflow": res.pair_overflow,
+            "transfer_bytes_packed": transfer_packed,
+            "transfer_bytes_band": transfer_band,
             "blocked": len(res.blocked),
             "matched": len(res.matched),
-            "pairs_per_s": len(res.blocked) / max(dt, 1e-9),
+            "pairs_per_s": len(res.blocked) / max(steady, 1e-9),
         }
+    seq = api.SequentialRunner(num_shards=r).resolve(
+        ents, bounds, api.ERConfig(window=w, variant=variant,
+                                   runner="sequential", num_shards=r,
+                                   matcher=matcher))
     out["parity"] = {
         "blocked_equal": results["scan"].blocked == results["pallas"].blocked,
         "matched_equal": results["scan"].matched == results["pallas"].matched,
+        "oracle_equal": results["scan"].blocked == seq.blocked
+        and results["scan"].matched == seq.matched,
     }
 
     # host pair collection: one synthetic stacked part with ~collect_pairs
@@ -210,7 +288,7 @@ def band_engine_body(n: int = 20_000, w: int = 10, n_keys: int = 2048,
 
 def balance_body(n: int = 6_000, w: int = 10, r: int = 8,
                  exponent: float = 1.0, n_clusters: int = 256,
-                 dup_frac: float = 0.15, reps: int = 3) -> dict:
+                 dup_frac: float = 0.15, reps: int = 5) -> dict:
     """Uniform vs blocksplit vs pairrange partition planners on a Zipfian
     hot-head corpus (the ISSUE 3 acceptance benchmark).
 
@@ -243,14 +321,12 @@ def balance_body(n: int = 6_000, w: int = 10, r: int = 8,
                            runner="vmap", num_shards=r, partitioner=planner)
         plan = B.plan_shards(ents, cfg, r)
         runner = api.VmapRunner(r)
-        runner.resolve(ents, plan, cfg)          # compile + warm
-        t0 = time.perf_counter()
-        for _ in range(reps):
-            res = runner.resolve(ents, plan, cfg)
-        dt = (time.perf_counter() - t0) / reps
+        cold, steady, res = _cold_steady(
+            lambda: runner.resolve(ents, plan, cfg), steady_reps=reps)
         pairs_by[planner] = res.blocked
         out["planners"][planner] = {
-            "seconds": dt,
+            "cold_seconds": cold, "steady_seconds": steady,
+            "seconds": steady,
             "imbalance_planned": plan.imbalance,
             "imbalance_realized": B.imbalance_ratio(
                 B.realized_comparisons(res.load, w)),
@@ -299,7 +375,8 @@ def jobsn_vs_repsn_body(n: int = 60_000, w: int = 50, n_keys: int = 4096,
     for variant in ["srp", "repsn", "jobsn"]:
         cfg = ERConfig(window=w, variant=variant, cap_factor=3.0,
                        runner="shard_map")
-        dt, n_pairs, _ = _time_pipeline(ents, mesh, bounds, cfg, reps)
+        cold, steady, n_pairs, _ = _time_pipeline(ents, mesh, bounds, cfg,
+                                                  reps)
         # collective profile of the compiled pipeline
         import jax as _jax
         runner = ShardMapRunner(mesh=mesh, axis="data")
@@ -308,7 +385,8 @@ def jobsn_vs_repsn_body(n: int = 60_000, w: int = 50, n_keys: int = 4096,
         ).lower(ents)
         an = hlo_analysis.analyze(lowered.compile().as_text())
         out[variant] = {
-            "seconds": dt, "pairs": n_pairs,
+            "cold_seconds": cold, "steady_seconds": steady,
+            "seconds": steady, "pairs": n_pairs,
             "collective_bytes": an["collective_bytes"],
             "permute_count": an["collectives"]["collective-permute"]["count"],
             "all_to_all_bytes": an["collectives"]["all-to-all"]["bytes"],

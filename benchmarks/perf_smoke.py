@@ -1,0 +1,141 @@
+"""Perf-smoke gate: fail CI when steady-state throughput regresses.
+
+Compares a freshly generated BENCH_band_engine.json against the committed
+baseline and exits non-zero when any engine's steady-state ``pairs_per_s``
+drops by more than ``--tolerance`` (default 30% — CPU CI runners are noisy;
+the gate is meant to catch structural regressions like losing the
+executable cache or re-introducing a per-call trace, not 5% jitter).
+Improvements and new fields never fail the gate.
+
+Because the committed baseline may have been generated on a different
+machine class than the CI runner, the absolute throughput is normalized by
+a machine-speed proxy (the collection micro-bench, which times identical
+synthetic host work in both blobs) before the tolerance is applied, and is
+backed by machine-INDEPENDENT structural gates that hold on any box:
+baseline/current workload parameters must match, steady state must beat
+cold by >= 2x per engine (the executable cache's signature), steady pallas
+must beat steady scan (the cascade's signature), and engine parity must
+hold.
+
+Usage (what .github/workflows/ci.yml runs):
+
+    cp BENCH_band_engine.json /tmp/baseline.json     # committed baseline
+    PYTHONPATH=src python -m benchmarks.run --quick --only band_engine
+    python -m benchmarks.perf_smoke /tmp/baseline.json BENCH_band_engine.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _steady_pairs_per_s(engine_blob: dict) -> float:
+    """pairs_per_s from a bench blob; pre-split baselines (no
+    steady_seconds) already reported a warmed-loop pairs_per_s."""
+    return float(engine_blob["pairs_per_s"])
+
+
+def _machine_speed_ratio(baseline: dict, current: dict) -> float:
+    """Crude machine-class normalizer for the absolute-throughput gate:
+    the collection micro-bench times identical synthetic numpy work in
+    both blobs, so its ratio approximates how much faster the current
+    machine is than wherever the baseline was generated (committed
+    baselines usually come from a different box than the CI runner).
+    Clamped to [0.25, 4] so a wild outlier can't scale a real regression
+    away; 1.0 when either blob lacks the section."""
+    try:
+        b = float(baseline["collection"]["packed_seconds"])
+        c = float(current["collection"]["packed_seconds"])
+    except (KeyError, TypeError, ValueError):
+        return 1.0
+    if b <= 0 or c <= 0:
+        return 1.0
+    return min(max(b / c, 0.25), 4.0)
+
+
+def check(baseline: dict, current: dict, tolerance: float) -> list:
+    """Returns a list of human-readable failures (empty = gate passes)."""
+    failures = []
+    # apples-to-apples: the absolute-throughput comparison is meaningless
+    # across different workloads (e.g. a baseline regenerated without
+    # --quick while CI runs --quick)
+    for param in ("n", "w", "r", "variant"):
+        if baseline.get(param) != current.get(param):
+            failures.append(
+                f"workload mismatch: baseline {param}={baseline.get(param)} "
+                f"vs current {param}={current.get(param)} — regenerate the "
+                f"committed baseline with the same bench parameters")
+    if failures:
+        return failures
+    # machine-independent structural gates (shared CI runners differ in
+    # absolute speed from wherever the baseline was generated; these catch
+    # the structural regressions regardless of machine class):
+    # losing the executable cache drives steady back toward cold,
+    cur_engines = current.get("engines", {})
+    for engine, blob in cur_engines.items():
+        speedup = blob.get("steady_speedup_vs_cold")
+        if speedup is not None and speedup < 2.0:
+            failures.append(
+                f"steady-state no longer beats cold for {engine!r} "
+                f"(steady_speedup_vs_cold={speedup:.2f} < 2.0) — is the "
+                f"executable cache still on the hot path?")
+    # and losing the cascade win inverts the engine ordering
+    if {"scan", "pallas"} <= cur_engines.keys():
+        scan_ps = _steady_pairs_per_s(cur_engines["scan"])
+        pallas_ps = _steady_pairs_per_s(cur_engines["pallas"])
+        if pallas_ps <= scan_ps:
+            failures.append(
+                f"steady-state pallas ({pallas_ps:.3e} pairs/s) no longer "
+                f"beats scan ({scan_ps:.3e}) — the cascade win regressed")
+    speed = _machine_speed_ratio(baseline, current)
+    for engine, base in baseline.get("engines", {}).items():
+        cur = current.get("engines", {}).get(engine)
+        if cur is None:
+            failures.append(f"engine {engine!r} present in baseline but "
+                            f"missing from current run")
+            continue
+        b = _steady_pairs_per_s(base)
+        c = _steady_pairs_per_s(cur) / speed      # machine-normalized
+        floor = b * (1.0 - tolerance)
+        verdict = "OK" if c >= floor else "REGRESSED"
+        print(f"perf_smoke {engine}: baseline={b:.3e} "
+              f"current={c:.3e} (machine-normalized /{speed:.2f}) "
+              f"floor={floor:.3e} pairs/s -> {verdict}")
+        if c < floor:
+            failures.append(
+                f"steady-state pairs_per_s for {engine!r} regressed "
+                f"{(1 - c / b) * 100:.1f}% (> {tolerance * 100:.0f}% "
+                f"tolerance, machine-normalized): {b:.3e} -> {c:.3e}")
+    if not baseline.get("engines"):
+        failures.append("baseline has no 'engines' section — not a "
+                        "BENCH_band_engine.json?")
+    # structural honesty: the current run must keep engine parity
+    parity = current.get("parity", {})
+    for k, v in parity.items():
+        if v is not True:
+            failures.append(f"current run broke parity: {k}={v}")
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", help="committed BENCH_band_engine.json")
+    ap.add_argument("current", help="freshly generated BENCH_band_engine.json")
+    ap.add_argument("--tolerance", type=float, default=0.30,
+                    help="allowed fractional pairs_per_s drop (default 0.30)")
+    args = ap.parse_args()
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.current) as f:
+        current = json.load(f)
+    failures = check(baseline, current, args.tolerance)
+    if failures:
+        for msg in failures:
+            print(f"perf_smoke FAIL: {msg}", file=sys.stderr)
+        sys.exit(1)
+    print("perf_smoke: steady-state throughput within tolerance")
+
+
+if __name__ == "__main__":
+    main()

@@ -81,18 +81,19 @@ def sec52_jobsn_vs_repsn(quick: bool):
 def band_engine(quick: bool):
     """Scan vs pallas band engine + host pair collection; persists the full
     result dict to BENCH_band_engine.json so later PRs have a perf
-    trajectory baseline."""
+    trajectory baseline (the perf-smoke CI gate compares steady-state
+    ``pairs_per_s`` against the committed copy — benchmarks/perf_smoke.py)."""
     from benchmarks.bench_sn import band_engine_body
     res = band_engine_body(
         n=6_000 if quick else 20_000, w=8 if quick else 10,
-        r=4, reps=2 if quick else 3,
-        collect_pairs=100_000)
+        r=4, reps=5, collect_pairs=100_000)
     for engine, v in res["engines"].items():
-        _row(f"band_engine_{engine}", v["seconds"] * 1e6,
+        _row(f"band_engine_{engine}", v["steady_seconds"] * 1e6,
+             f"cold_us={v['cold_seconds'] * 1e6:.0f};"
              f"matcher_evals={v['matcher_evals']};"
              f"band_slots={v['band_slots']};"
              f"cand_cap={v['cand_cap']};"
-             f"flops_est={v['matcher_flops_est']:.2e};"
+             f"pair_cap={v['pair_cap']};"
              f"pairs_per_s={v['pairs_per_s']:.2e}")
     c = res["collection"]
     _row("band_engine_collection", c["packed_seconds"] * 1e6,
@@ -109,9 +110,10 @@ def balance(quick: bool):
     exponent >= 1.0, with exact pair-set parity)."""
     from benchmarks.bench_sn import balance_body
     res = balance_body(n=6_000 if quick else 20_000, w=10, r=8,
-                       exponent=1.0, reps=2 if quick else 3)
+                       exponent=1.0, reps=5)
     for planner, v in res["planners"].items():
-        _row(f"balance_{planner}", v["seconds"] * 1e6,
+        _row(f"balance_{planner}", v["steady_seconds"] * 1e6,
+             f"cold_us={v['cold_seconds'] * 1e6:.0f};"
              f"imbalance={v['imbalance_planned']:.2f};"
              f"cap_link={v['cap_link']};"
              f"band_slots={v['band_slots_per_shard']};"

@@ -34,9 +34,10 @@ from repro.api.config import ERConfig
 from repro.api.facade import default_bounds, link, make_runner, resolve
 from repro.api.linkage import sequential_link_pairs, tag_sources
 from repro.api.results import (BalanceMetrics, BlockingResult, ERMetrics,
-                               ERResult, pack_pairs, packed_pairs_from_band,
-                               packed_to_frozenset, pairs_from_band,
-                               unpack_pairs)
+                               ERResult, PerfStats, pack_pairs,
+                               packed_pairs_from_band, packed_pairs_from_idx,
+                               packed_pairs_from_part, packed_to_frozenset,
+                               pairs_from_band, unpack_pairs)
 from repro.api.runners import (Runner, RunnerOutcome, SequentialRunner,
                                ShardMapRunner, VmapRunner, shard_input)
 from repro.api.variants import (available_variants, get_variant,
@@ -50,9 +51,10 @@ from repro.core.window import (available_band_engines, get_band_engine,
 __all__ = [
     "ERConfig",
     "resolve", "link", "make_runner", "default_bounds",
-    "BlockingResult", "ERResult", "ERMetrics", "BalanceMetrics",
+    "BlockingResult", "ERResult", "ERMetrics", "BalanceMetrics", "PerfStats",
     "pairs_from_band",
-    "packed_pairs_from_band", "pack_pairs", "unpack_pairs",
+    "packed_pairs_from_band", "packed_pairs_from_idx",
+    "packed_pairs_from_part", "pack_pairs", "unpack_pairs",
     "packed_to_frozenset",
     "Runner", "RunnerOutcome",
     "SequentialRunner", "VmapRunner", "ShardMapRunner", "shard_input",

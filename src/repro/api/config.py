@@ -20,6 +20,7 @@ RUNNERS = ("sequential", "vmap", "shard_map")
 PARTITIONERS = ("balanced", "range", "sample",
                 "uniform", "blocksplit", "pairrange")
 BAND_ENGINES = ("scan", "pallas")
+EMIT_MODES = ("band", "pairs")
 
 
 @dataclass(frozen=True)
@@ -50,7 +51,29 @@ class ERConfig:
                     candidates are dropped AND counted (cand_overflow in
                     results) — the SRP capacity model applied to matching
       band_interpret  force the Pallas interpreter on/off; None -> auto
-                    (interpret off-TPU, native on TPU)
+                    (native kernel on TPU; off-TPU the cheap stage runs as
+                    a band-shaped jnp evaluation — same math, without the
+                    tile kernel's 2*band_block scores per row.  True forces
+                    the Pallas interpreter: the kernel-validation path)
+
+    Pair emission (how blocked/matched pairs leave the device):
+      emit          "band" (transfer the (w-1, M) boolean bands, extract
+                    pairs on host) | "pairs" (compact each band into packed
+                    (d-1)*M+i index buffers ON DEVICE via the cumsum
+                    machinery; the host consumes small int buffers + per-
+                    shard counts — the steady-state transfer path)
+      pair_cap      per-shard, per-part capacity of the emitted index
+                    buffers; 0 -> (w-1)*M (never overflows).  Overflowing
+                    slots are dropped AND counted (pair_overflow in
+                    results — blocked pairs CAN be lost here, unlike
+                    cand_cap, so size it >= (w-1)*max_load for parity)
+
+    Execution cache:
+      jit_cache     route device runners through the repro.perf executable
+                    cache: each (config statics, shapes) combination lowers
+                    to one jitted executable, reused across calls (cache
+                    hits/misses/traces reported on ERResult.perf).  False
+                    keeps the legacy trace-per-call behavior
 
     Execution:
       runner       "sequential" (host oracle) | "vmap" (single device,
@@ -86,6 +109,10 @@ class ERConfig:
     cand_cap: int = 0
     band_interpret: Optional[bool] = None
 
+    emit: str = "band"
+    pair_cap: int = 0
+    jit_cache: bool = True
+
     runner: str = "vmap"
     num_shards: int = 8
     partitioner: str = "balanced"
@@ -118,6 +145,17 @@ class ERConfig:
         if self.cand_cap < 0:
             raise ValueError(f"cand_cap must be >= 0 (0 = unbounded), "
                              f"got {self.cand_cap}")
+        if self.emit not in EMIT_MODES:
+            raise ValueError(f"unknown emit mode {self.emit!r}; choose from "
+                             f"{EMIT_MODES}")
+        if self.pair_cap < 0:
+            raise ValueError(f"pair_cap must be >= 0 (0 = full band, never "
+                             f"overflows), got {self.pair_cap}")
+        if self.emit == "pairs" and self.return_scores:
+            raise ValueError(
+                "emit='pairs' transfers packed pair indices instead of "
+                "bands, so per-slot scores are not materialized on host; "
+                "use emit='band' with return_scores=True")
         if self.band_engine == "pallas" and self.window - 1 > self.band_block:
             # the band kernels need the whole w-1 band inside one row block
             # (plus its successor); catching this here beats a kernel assert
@@ -132,6 +170,20 @@ class ERConfig:
     def with_(self, **kw) -> "ERConfig":
         """Functional update (dataclasses.replace sugar)."""
         return replace(self, **kw)
+
+    def static_fingerprint(self) -> tuple:
+        """Stable hashable key of every field that shapes the traced shard
+        program — the config half of a ``repro.perf`` executable-cache key.
+
+        Two configs with equal fingerprints lower to the same program for
+        same-shaped inputs; fields that only steer host-side planning or
+        result assembly (runner, num_shards, partitioner, compute_metrics,
+        jit_cache) are deliberately excluded so e.g. switching partitioners
+        reuses the compiled executable (boundaries are traced arguments)."""
+        return ("ERConfig", self.window, self.variant, self.hops,
+                self.cap_factor, self.matcher, self.return_scores,
+                self.band_engine, self.band_block, self.cand_cap,
+                self.band_interpret, self.emit, self.pair_cap, self.linkage)
 
     @classmethod
     def from_sn_config(cls, sn_cfg, **kw) -> "ERConfig":

@@ -20,10 +20,11 @@ from repro import balance as B
 from repro.api import linkage as LK
 from repro.api.config import ERConfig
 from repro.api.results import (BalanceMetrics, BlockingResult, ERResult,
-                               compute_metrics)
+                               PerfStats, compute_metrics)
 from repro.api.runners import (Runner, SequentialRunner, ShardMapRunner,
                                VmapRunner)
 from repro.core import sn
+from repro.perf import cache as PC
 
 
 def make_runner(cfg: ERConfig, *, mesh=None, axis: str = "data") -> Runner:
@@ -123,7 +124,12 @@ def resolve(ents: dict, cfg: ERConfig, *, bounds=None, mesh=None,
             raise ValueError(
                 f"bounds define {plan.num_shards} partitions but only "
                 f"{n_valid} valid entities exist; use fewer partitions")
+    cache = PC.executable_cache()
+    h0, m0, t0 = cache.stats.snapshot()
     out = runner.resolve(ents, plan, cfg)
+    h1, m1, t1 = cache.stats.snapshot()
+    perf = PerfStats(cache_hits=h1 - h0, cache_misses=m1 - m0,
+                     traces=t1 - t0, cache_entries=len(cache))
 
     blocking = BlockingResult(pairs=out.blocked, load=out.load,
                               overflow=out.overflow, variant=cfg.variant,
@@ -131,7 +137,8 @@ def resolve(ents: dict, cfg: ERConfig, *, bounds=None, mesh=None,
                               num_shards=out.num_shards,
                               cand_count=out.cand_count,
                               cand_overflow=out.cand_overflow,
-                              matcher_evals=out.matcher_evals)
+                              matcher_evals=out.matcher_evals,
+                              pair_overflow=out.pair_overflow)
     balance = _balance_metrics(plan, out, cfg.window)
     metrics = None
     if cfg.compute_metrics:
@@ -148,7 +155,7 @@ def resolve(ents: dict, cfg: ERConfig, *, bounds=None, mesh=None,
                             _total_comparisons(ents, cfg)),
             balance=balance)
     return ERResult(blocking=blocking, matches=out.matched, metrics=metrics,
-                    balance=balance)
+                    balance=balance, perf=perf)
 
 
 def link(lhs: dict, rhs: dict, cfg: ERConfig, *, bounds=None, mesh=None,
@@ -164,7 +171,8 @@ def link(lhs: dict, rhs: dict, cfg: ERConfig, *, bounds=None, mesh=None,
         pairs=frozenset(LK.untag_pairs(b.pairs, offset)), load=b.load,
         overflow=b.overflow, variant=b.variant, runner=b.runner,
         window=b.window, num_shards=b.num_shards, cand_count=b.cand_count,
-        cand_overflow=b.cand_overflow, matcher_evals=b.matcher_evals)
+        cand_overflow=b.cand_overflow, matcher_evals=b.matcher_evals,
+        pair_overflow=b.pair_overflow)
     return ERResult(blocking=blocking,
                     matches=frozenset(LK.untag_pairs(res.matches, offset)),
-                    metrics=res.metrics, balance=res.balance)
+                    metrics=res.metrics, balance=res.balance, perf=res.perf)

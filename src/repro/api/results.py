@@ -93,6 +93,34 @@ class BalanceMetrics:
 
 
 @dataclass(frozen=True)
+class PerfStats:
+    """Execution-cache telemetry for one ``resolve``/``link`` call (the
+    steady-state contract of ISSUE 4: after warmup, every call should be
+    ``cache_hits > 0, cache_misses == traces == 0``).
+
+    cache_hits      executables reused from the repro.perf cache
+    cache_misses    executables built (== programs lowered) by this call
+    traces          jit traces actually performed (a healthy cache has
+                    traces == cache_misses; more means a keying bug let one
+                    executable see two shapes)
+    cache_entries   total executables resident after the call
+    """
+    cache_hits: int
+    cache_misses: int
+    traces: int
+    cache_entries: int
+
+    @property
+    def steady_state(self) -> bool:
+        """True when the call ran entirely from cached executables — at
+        least one hit and no build/trace.  A bypassed cache (jit_cache=
+        False, legacy shims) reports all-zero counters and is NOT steady
+        state: it re-traced every call."""
+        return self.cache_hits > 0 and self.traces == 0 and \
+            self.cache_misses == 0
+
+
+@dataclass(frozen=True)
 class ERMetrics:
     """Blocking quality vs the sequential-SN oracle (the standard blocking
     metrics; the paper reports |B| and completeness of the variants).
@@ -121,6 +149,10 @@ class BlockingResult:
     cand_count: Tuple[int, ...] = ()  # per-shard gate survivors (pallas)
     cand_overflow: int = 0          # cascade survivors dropped by cand_cap
     matcher_evals: int = 0          # full-cascade evaluations actually run
+    pair_overflow: int = 0          # emitted pair-index slots dropped by
+    #                                 pair_cap (emit="pairs"; can lose
+    #                                 blocked pairs AND matches — counted,
+    #                                 never silent)
 
     @property
     def max_load(self) -> int:
@@ -142,6 +174,8 @@ class ERResult:
     matches: FrozenSet[Pair]        # matcher-accepted pairs
     metrics: Optional[ERMetrics] = None
     balance: Optional[BalanceMetrics] = None
+    perf: Optional[PerfStats] = None  # executable-cache telemetry for this
+    #                                   call (hits / misses / traces)
 
     @property
     def pairs(self) -> FrozenSet[Pair]:
@@ -149,6 +183,39 @@ class ERResult:
 
 
 # -- pair extraction (band mask -> host pairs) --------------------------------------
+
+def packed_pairs_from_idx(part: dict, field: str = "match") -> np.ndarray:
+    """Device-emitted packed indices -> deduplicated packed pair array.
+
+    ``part``: stacked per-shard output with ``eid`` (r, M) plus the emitted
+    buffers ``<field>_idx`` (r, cap) int32 flat band indices ``(d-1)*M+i``
+    and ``<field>_n`` (r,) valid counts (window.emit_band_indices).  Eid
+    translation is vectorized: one mask + two fancy gathers + ``np.unique``
+    over ~cap slots instead of an O(r*w*M) band scan."""
+    eid = np.asarray(part["eid"] if "eid" in part
+                     else part["ents"]["eid"])            # (r, M)
+    idx = np.asarray(part[field + "_idx"])                # (r, cap)
+    cnt = np.asarray(part[field + "_n"]).reshape(-1)      # (r,)
+    m = eid.shape[1]
+    keep = np.arange(idx.shape[1])[None, :] < cnt[:, None]
+    ss, pp = np.nonzero(keep)
+    if ss.size == 0:
+        return np.empty((0,), PACKED_DTYPE)
+    flat = idx[ss, pp].astype(np.int64)
+    d = flat // m + 1
+    i = flat % m
+    a = eid[ss, i]
+    b = eid[ss, i + d]              # in-bounds: band masks force i + d < M
+    return np.unique(pack_pairs(a, b))
+
+
+def packed_pairs_from_part(part: dict, field: str = "match") -> np.ndarray:
+    """Collect a part through whichever representation it carries:
+    device-emitted index buffers (emit="pairs") or boolean bands."""
+    if field + "_idx" in part:
+        return packed_pairs_from_idx(part, field)
+    return packed_pairs_from_band(part, field)
+
 
 def packed_pairs_from_band(part: dict, field: str = "match") -> np.ndarray:
     """Vectorized band -> deduplicated packed pair array (the hot host path).

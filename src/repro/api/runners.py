@@ -21,6 +21,14 @@ ShardPlan — plans additionally carry rank-granular per-entity routing
 planned shuffle capacity (used when ``cfg.cap_factor`` doesn't override it),
 so every variant x runner x band-engine combination executes planner output
 with zero call-site changes.
+
+Steady-state execution (ISSUE 4): with ``cfg.jit_cache`` (the default) the
+device runners route through the ``repro.perf`` executable cache — each
+(config statics, planner capacity, input shapes) combination is lowered to
+ONE jitted executable (boundary VALUES are traced arguments, so replanning
+never retraces), with the stacked shard input donated where the backend
+supports it.  ``SequentialRunner._match`` jit-caches its chunk scorer the
+same way, padding the tail chunk so every chunk reuses one executable.
 """
 from __future__ import annotations
 
@@ -38,6 +46,7 @@ from repro.api import results as RES
 from repro.api.variants import get_variant
 from repro.balance.planners import as_plan
 from repro.core import entities as E
+from repro.perf import cache as PC
 
 Pair = Tuple[int, int]
 
@@ -63,6 +72,16 @@ def _apply_plan(ents: dict, bounds, r: int, cfg):
     return ents, jnp.asarray(plan.bounds, jnp.int32), cap_link
 
 
+def _cache_fingerprint(cfg):
+    """Config half of an executable-cache key, or None to bypass the cache
+    (cfg.jit_cache=False, or a legacy ``pipeline.SNConfig`` shim object
+    without the ERConfig surface)."""
+    if not getattr(cfg, "jit_cache", True):
+        return None
+    fp = getattr(cfg, "static_fingerprint", None)
+    return fp() if fp is not None else None
+
+
 class RunnerOutcome(NamedTuple):
     """What every runner returns: host pair sets + accounting.
 
@@ -83,6 +102,9 @@ class RunnerOutcome(NamedTuple):
     cand_count: Tuple[int, ...] = ()
     cand_overflow: int = 0
     matcher_evals: int = 0
+    pair_overflow: int = 0      # emitted index-buffer slots dropped by
+    #                             cfg.pair_cap (emit="pairs" only; counted,
+    #                             never silent — can lose blocked pairs)
 
 
 @runtime_checkable
@@ -112,18 +134,23 @@ def _device_outcome(out: dict, cfg, r: int) -> RunnerOutcome:
     load = tuple(int(x) for x in np.asarray(out["load"])[0])
     overflow = int(np.asarray(out["overflow"])[0])
     cand_count = np.zeros(r, np.int64)
-    cand_overflow = matcher_evals = 0
+    cand_overflow = matcher_evals = pair_overflow = 0
     for p in variant.parts:
         if p in out:
             cand_count += np.asarray(out[p]["cand_count"], np.int64)
             cand_overflow += int(np.asarray(out[p]["cand_overflow"]).sum())
             matcher_evals += int(np.asarray(out[p]["matcher_evals"]).sum())
+            if "mask_overflow" in out[p]:     # device-side pair emission
+                pair_overflow += \
+                    int(np.asarray(out[p]["mask_overflow"]).sum()) + \
+                    int(np.asarray(out[p]["match_overflow"]).sum())
     return RunnerOutcome(blocked=RES.packed_to_frozenset(col.blocked),
                          matched=RES.packed_to_frozenset(col.matched),
                          load=load, overflow=overflow, num_shards=r,
                          cand_count=tuple(int(c) for c in cand_count),
                          cand_overflow=cand_overflow,
-                         matcher_evals=matcher_evals)
+                         matcher_evals=matcher_evals,
+                         pair_overflow=pair_overflow)
 
 
 @dataclass(frozen=True)
@@ -140,9 +167,22 @@ class VmapRunner:
         r = self.num_shards
         variant = get_variant(cfg.variant)
         ents, b, cap_link = _apply_plan(ents, bounds, r, cfg)
-        fn = partial(variant.shard_program, bounds=b, r=r, axis="sn",
-                     cfg=cfg, cap_link=cap_link)
-        return jax.vmap(fn, axis_name="sn")(shard_input(ents, r))
+        fn = partial(variant.shard_program, r=r, axis="sn", cfg=cfg,
+                     cap_link=cap_link)
+        stacked = shard_input(ents, r)
+
+        def program(st, bd):
+            return jax.vmap(lambda e: fn(e, bounds=bd),
+                            axis_name="sn")(st)
+
+        fp = _cache_fingerprint(cfg)
+        if fp is None:
+            return program(stacked, b)       # legacy trace-per-call path
+        call = PC.executable_cache().get_or_build(
+            ("vmap", r, "sn", fp, cap_link,
+             PC.tree_fingerprint((stacked, b))),
+            lambda: program, donate_argnums=(0,))
+        return call(stacked, b)
 
     def resolve(self, ents: dict, bounds, cfg) -> RunnerOutcome:
         return _device_outcome(self.run_raw(ents, bounds, cfg), cfg,
@@ -179,23 +219,37 @@ class ShardMapRunner:
         variant = get_variant(cfg.variant)
         ents, b, cap_link = _apply_plan(ents, bounds, r, cfg)
         stacked = shard_input(ents, r)
-        fn = partial(variant.shard_program, bounds=b, r=r, axis=axis,
-                     cfg=cfg, cap_link=cap_link)
+        fn = partial(variant.shard_program, r=r, axis=axis, cfg=cfg,
+                     cap_link=cap_link)
 
-        def body(stacked_local):
-            # stacked_local: (1, cap0, ...) — this shard's mapper partition
-            local = jax.tree.map(lambda x: x[0], stacked_local)
-            out = fn(local)
-            return jax.tree.map(lambda x: jnp.expand_dims(x, 0), out)
+        def make_program():
+            # bounds ride as a replicated traced argument so replanning
+            # never rebuilds; the eval_shape pass (out_specs need the output
+            # tree; vmap binds the axis name so the collectives trace) runs
+            # once per cache entry instead of once per call
+            def body(stacked_local, bounds_rep):
+                # stacked_local: (1, cap0, ...) — this shard's partition
+                local = jax.tree.map(lambda x: x[0], stacked_local)
+                out = fn(local, bounds=bounds_rep)
+                return jax.tree.map(lambda x: jnp.expand_dims(x, 0), out)
 
-        # out_specs from an abstract vmap pass (vmap binds the axis name so
-        # the collectives trace; eval_shape alone hits "unbound axis name")
-        out_sds = jax.eval_shape(
-            lambda st: jax.vmap(lambda l: fn(l), axis_name=axis)(st), stacked)
-        out_specs = jax.tree.map(lambda _: P(axis), out_sds)
-        return shard_map(body, mesh=mesh,
-                         in_specs=(jax.tree.map(lambda _: P(axis), stacked),),
-                         out_specs=out_specs, check_rep=False)(stacked)
+            out_sds = jax.eval_shape(
+                lambda st, bd: jax.vmap(lambda l: fn(l, bounds=bd),
+                                        axis_name=axis)(st), stacked, b)
+            out_specs = jax.tree.map(lambda _: P(axis), out_sds)
+            return shard_map(
+                body, mesh=mesh,
+                in_specs=(jax.tree.map(lambda _: P(axis), stacked), P()),
+                out_specs=out_specs, check_rep=False)
+
+        fp = _cache_fingerprint(cfg)
+        if fp is None:
+            return make_program()(stacked, b)    # legacy per-call path
+        call = PC.executable_cache().get_or_build(
+            ("shard_map", axis, self.mesh, fp,
+             cap_link, PC.tree_fingerprint((stacked, b))),
+            make_program, donate_argnums=(0,))
+        return call(stacked, b)
 
     def resolve(self, ents: dict, bounds, cfg) -> RunnerOutcome:
         return _device_outcome(self.run_raw(ents, bounds, cfg), cfg,
@@ -240,7 +294,13 @@ class SequentialRunner:
     def _match(self, ents: dict, blocked: np.ndarray, cfg) -> np.ndarray:
         """Batch-score blocked pairs (packed uint64 array) with the cascade
         matcher (skip=False: identical accept/reject decisions, exact
-        scores).  Returns the matched subset, still packed."""
+        scores).  Returns the matched subset, still packed.
+
+        The chunk scorer is jit-compiled ONCE per (payload schema, chunk
+        shape, matcher) through the repro.perf executable cache — payload
+        moves to device once per call and chunks gather inside the compiled
+        program; the tail chunk is padded to ``match_chunk`` so it reuses
+        the same executable instead of compiling a second shape."""
         if blocked.size == 0:
             return blocked
         valid = np.asarray(ents["valid"])
@@ -252,14 +312,33 @@ class SequentialRunner:
         plo, phi = RES.unpack_pairs(blocked)
         ra = sorted_rows[np.searchsorted(sorted_eids, plo)]
         rb = sorted_rows[np.searchsorted(sorted_eids, phi)]
-        payload = {k: np.asarray(v) for k, v in ents["payload"].items()}
+        payload = {k: jnp.asarray(v) for k, v in ents["payload"].items()}
+
+        chunk = self.match_chunk
+        matcher = cfg.matcher
+
+        def program(pl, ia, ib):
+            pa = {k: v[ia] for k, v in pl.items()}
+            pb = {k: v[ib] for k, v in pl.items()}
+            score, _ = matcher.combined(pa, pb, skip=False)
+            return score >= matcher.threshold
+
+        if getattr(cfg, "jit_cache", True):
+            scorer = PC.executable_cache().get_or_build(
+                ("seq_match", matcher, chunk,
+                 PC.tree_fingerprint(payload)),
+                lambda: program)
+        else:
+            scorer = program
 
         keep = np.zeros(blocked.shape[0], bool)
-        for s in range(0, blocked.shape[0], self.match_chunk):
-            ia, ib = ra[s:s + self.match_chunk], rb[s:s + self.match_chunk]
-            pa = {k: jnp.asarray(v[ia]) for k, v in payload.items()}
-            pb = {k: jnp.asarray(v[ib]) for k, v in payload.items()}
-            score, _ = cfg.matcher.combined(pa, pb, skip=False)
-            keep[s:s + self.match_chunk] = np.asarray(
-                score >= cfg.matcher.threshold)
+        for s in range(0, blocked.shape[0], chunk):
+            ia, ib = ra[s:s + chunk], rb[s:s + chunk]
+            ln = ia.shape[0]
+            if ln < chunk:                  # pad the tail: one executable
+                ia = np.concatenate([ia, np.zeros(chunk - ln, ia.dtype)])
+                ib = np.concatenate([ib, np.zeros(chunk - ln, ib.dtype)])
+            got = np.asarray(scorer(payload, jnp.asarray(ia),
+                                    jnp.asarray(ib)))
+            keep[s:s + ln] = got[:ln]
         return blocked[keep]

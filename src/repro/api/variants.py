@@ -94,10 +94,32 @@ class VariantBase:
         """Evaluate this part's window band with the configured BandEngine
         (scan oracle or the Pallas cascade — see core/window.py); the engine
         owns masking (incl. the linkage cross-source rule), matching, and
-        the cascade's candidate/overflow accounting."""
+        the cascade's candidate/overflow accounting.
+
+        With ``cfg.emit == "pairs"`` the boolean bands never leave the
+        device: each is compacted into a packed flat-index buffer
+        (``window.emit_band_indices`` — capacity ``cfg.pair_cap``, overflow
+        counted) and the part carries only those buffers plus the (M,) eid
+        vector for host translation, instead of O(w*M) bands + full payload
+        slices."""
         engine = W.get_band_engine(getattr(cfg, "band_engine", "scan"))
         out = engine.band(e, cfg, halo_len=halo_len, mode=mode)
-        out["ents"] = e
+        if getattr(cfg, "emit", "band") == "pairs":
+            m = e["valid"].shape[0]
+            full = (cfg.window - 1) * m
+            cap = min(cfg.pair_cap, full) if cfg.pair_cap > 0 else full
+            bound = engine.match_bound(e, cfg)     # match band is sparser:
+            caps = {"mask": cap,                   # engines with a provable
+                    "match": cap if bound is None  # bound (pallas cand_cap)
+                    else min(cap, bound)}          # shrink its buffer
+            for field in ("mask", "match"):
+                emitted = W.emit_band_indices(out.pop(field), caps[field])
+                out.update({f"{field}_idx": emitted["idx"],
+                            f"{field}_n": emitted["n"],
+                            f"{field}_overflow": emitted["overflow"]})
+            out["eid"] = e["eid"]
+        else:
+            out["ents"] = e
         out["halo_len"] = halo_len
         return out
 
@@ -107,10 +129,12 @@ class VariantBase:
         """Stacked runner output -> deduplicated PACKED pair arrays (uint64
         ``(lo << 32) | hi``).  Parts are unioned via np.unique, so a pair
         emitted by several parts/shards counts once; frozensets appear only
-        at the RunnerOutcome boundary."""
-        blocked = [RES.packed_pairs_from_band(out[p], "mask")
+        at the RunnerOutcome boundary.  Device-emitted parts (emit="pairs")
+        and band parts are consumed transparently
+        (``results.packed_pairs_from_part``)."""
+        blocked = [RES.packed_pairs_from_part(out[p], "mask")
                    for p in self.parts if p in out]
-        matched = [RES.packed_pairs_from_band(out[p], "match")
+        matched = [RES.packed_pairs_from_part(out[p], "match")
                    for p in self.parts if p in out]
         dedup = lambda parts: np.unique(np.concatenate(parts)) if parts \
             else np.empty((0,), RES.PACKED_DTYPE)

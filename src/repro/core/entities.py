@@ -57,10 +57,13 @@ def permute(ents, order) -> dict:
 
 
 def sort_entities(ents) -> dict:
-    """Deterministic sort by (key, eid), invalid slots last."""
-    pre = jnp.argsort(ents["eid"])
-    ents = permute(ents, pre)
-    order = jnp.argsort(sort_key(ents), stable=True)
+    """Deterministic sort by (key, eid), invalid slots last.
+
+    One ``lexsort`` + one payload permute (the old two-pass argsort-by-eid
+    then stable-argsort-by-key permuted every payload field twice — this is
+    the reduce-side sort on the shuffle hot path, paid once per shard per
+    call)."""
+    order = jnp.lexsort((ents["eid"], sort_key(ents)))
     return permute(ents, order)
 
 
@@ -110,11 +113,17 @@ def roll(ents, shift) -> dict:
 def synth_entities(rng: np.random.Generator, n: int, *,
                    n_keys: int = 1000, sig_words: int = 8,
                    feat_dim: int = 32, dup_frac: float = 0.2,
-                   skew: float = 0.0) -> dict:
+                   skew: float = 0.0, text_len: int = 0) -> dict:
     """Synthetic publication-like corpus (paper §5.1 analogue: 1.4M records,
     key = first letters of title).  ``skew`` in [0,1): fraction of entities
     concentrated on the largest key (paper's Even8_40..85 configurations).
-    Duplicates get near-identical payloads (detectable by the matchers)."""
+    Duplicates get near-identical payloads (detectable by the matchers).
+
+    ``text_len > 0`` adds a padded-bytes "text" field (random lowercase
+    strings; duplicates copy the original with a single-character typo) —
+    the payload for the paper's EXPENSIVE edit-distance matcher, so
+    cascade benchmarks have a real cost gap between cheap and full
+    evaluation."""
     keys = rng.integers(0, n_keys, size=n).astype(np.int32)
     if skew > 0:
         hot = rng.random(n) < skew
@@ -122,6 +131,8 @@ def synth_entities(rng: np.random.Generator, n: int, *,
     feat = rng.normal(size=(n, feat_dim)).astype(np.float32)
     sig = rng.integers(0, 2**32, size=(n, sig_words), dtype=np.uint64) \
         .astype(np.uint32)
+    text = rng.integers(ord("a"), ord("z") + 1, size=(n, text_len)) \
+        .astype(np.uint8) if text_len else None
     # plant duplicates: copy an earlier entity's key/payload with tiny noise
     n_dup = int(n * dup_frac)
     if n_dup:
@@ -131,7 +142,13 @@ def synth_entities(rng: np.random.Generator, n: int, *,
         feat[dst] = feat[src] + 0.01 * rng.normal(size=(n_dup, feat_dim)) \
             .astype(np.float32)
         sig[dst] = sig[src]
+        if text is not None:
+            text[dst] = text[src]
+            typo_pos = rng.integers(0, text_len, size=n_dup)
+            text[dst, typo_pos] = rng.integers(
+                ord("a"), ord("z") + 1, size=n_dup).astype(np.uint8)
     feat /= np.linalg.norm(feat, axis=1, keepdims=True) + 1e-9
-    return make_entities(
-        keys, np.arange(n, dtype=np.int32),
-        payload={"feat": jnp.asarray(feat), "sig": jnp.asarray(sig)})
+    payload = {"feat": jnp.asarray(feat), "sig": jnp.asarray(sig)}
+    if text is not None:
+        payload["text"] = jnp.asarray(text)
+    return make_entities(keys, np.arange(n, dtype=np.int32), payload=payload)

@@ -27,10 +27,11 @@ from repro.core import entities as E
 from repro.core.repsn import tail_window
 
 
-def head_window(ents: dict, w: int) -> dict:
+def head_window(ents: dict, w: int, *, presorted: bool = False) -> dict:
     """First w-1 valid entities (sorted shards keep valid first, so this is a
-    static slice; trailing slots may be invalid)."""
-    s = E.sort_entities(ents)
+    static slice; trailing slots may be invalid).  ``presorted=True`` skips
+    the redundant (key, eid) sort for callers holding a post-SRP shard."""
+    s = ents if presorted else E.sort_entities(ents)
     return E.slice_entities(s, 0, w - 1)
 
 
@@ -42,12 +43,12 @@ def boundary_group(sorted_ents: dict, w: int, r: int,
     (zero-filled), so its boundary band is empty.  Returns (group, halo_len)
     with halo_len = w-1 marking the boundary position for mode="cross"."""
     back = [(i, (i - 1) % r) for i in range(r)]
-    head = head_window(sorted_ents, w)
+    head = head_window(sorted_ents, w, presorted=True)
     recv = jax.tree.map(lambda x: jax.lax.ppermute(x, axis, back), head)
     # full-ring permute (vmap requires completeness): drop the wrapped edge —
     # shard r-1 has no successor, so its received head is invalid.
     last = jax.lax.axis_index(axis) == r - 1
     recv["valid"] = recv["valid"] & ~last
     recv["key"] = jnp.where(recv["valid"], recv["key"], E.INVALID_KEY)
-    tail = tail_window(sorted_ents, w)
+    tail = tail_window(sorted_ents, w, presorted=True)
     return E.concat(tail, recv), w - 1

@@ -22,10 +22,15 @@ import jax.numpy as jnp
 from repro.core import entities as E
 
 
-def tail_window(ents: dict, w: int) -> dict:
+def tail_window(ents: dict, w: int, *, presorted: bool = False) -> dict:
     """Last w-1 valid entities (in key order), rolled so padding sits FIRST —
-    prepending this to a sorted shard keeps valid slots contiguous."""
-    s = E.sort_entities(ents)
+    prepending this to a sorted shard keeps valid slots contiguous.
+
+    ``presorted=True`` skips the (key, eid) sort when the caller already
+    holds a sorted shard (the post-SRP fast path: the shuffle output is
+    sorted once in ``srp_shard``, so re-sorting here paid a redundant
+    full-payload sort per halo hop on the steady-state hot path)."""
+    s = ents if presorted else E.sort_entities(ents)
     nv = E.n_valid(s)
     start = jnp.clip(nv - (w - 1), 0, s["key"].shape[0])
     tail = E.slice_entities(s, start, w - 1)
@@ -50,8 +55,10 @@ def halo_exchange(sorted_ents: dict, w: int, r: int, axis: str,
                   hops: int = 1) -> dict:
     """Returns the (w-1)-slot halo = last w-1 global predecessors of this
     shard's key range (valid contiguous at the halo's tail)."""
-    halo = _ring_fwd(tail_window(sorted_ents, w), r, axis)
+    halo = _ring_fwd(tail_window(sorted_ents, w, presorted=True), r, axis)
     for _ in range(hops - 1):
+        # [halo | native] interleaves the halo's leading padding with native
+        # keys, so the multi-hop concat DOES need the sort
         halo = _ring_fwd(
             tail_window(E.concat(halo, sorted_ents), w), r, axis)
     return halo

@@ -122,33 +122,89 @@ def band_matches(ents: dict, w: int, matcher: CascadeMatcher, *,
     return (scores >= matcher.threshold) & mask
 
 
+def compact_flat(band: jax.Array, cap: int
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Pack the True positions of a boolean band (w-1, M) into a fixed-
+    capacity buffer of FLAT indices ``(d-1)*M + i``, in band order.
+
+    Cumsum-based: each survivor's slot is its exclusive prefix count — O(wM)
+    work and one scatter, vs a full-band argsort's O(wM log wM).
+
+    Returns (flat_idx (cap,) int32, n_true () int32, overflow () int32);
+    positions past ``cap`` are dropped but counted in ``overflow`` (never
+    silent).  Buffer slots beyond ``min(n_true, cap)`` are zero-filled."""
+    flat = band.reshape(-1)
+    n = flat.shape[0]
+    rank = jnp.cumsum(flat.astype(jnp.int32)) - 1          # survivor rank
+    n_true = jnp.sum(flat.astype(jnp.int32))
+    target = jnp.where(flat & (rank < cap), rank, cap)     # cap -> dump slot
+    buf = jnp.zeros((cap + 1,), jnp.int32).at[target].set(
+        jnp.arange(n, dtype=jnp.int32), mode="drop")
+    overflow = jnp.maximum(n_true - cap, 0)
+    return buf[:cap], n_true, overflow
+
+
 def compact_candidates(gate: jax.Array, cap: int
                        ) -> Tuple[jax.Array, jax.Array, jax.Array,
                                   jax.Array, jax.Array]:
     """Stage-2 of the cascade: pack the True (d, i) band positions of
-    ``gate`` (w-1, M) into a fixed-capacity candidate list, in band order.
-
-    Cumsum-based: each survivor's slot is its exclusive prefix count — O(wM)
-    work and one scatter, vs the old full-band argsort's O(wM log wM).
+    ``gate`` (w-1, M) into a fixed-capacity candidate list, in band order
+    (``compact_flat`` split back into (i, d) coordinates).
 
     Returns (cand_i, cand_d, cand_valid, n_cand, overflow); candidates past
     ``cap`` are dropped but counted in ``overflow`` (never silent)."""
-    wm1, m = gate.shape
-    flat = gate.reshape(-1)
-    n = flat.shape[0]
-    rank = jnp.cumsum(flat.astype(jnp.int32)) - 1          # survivor rank
-    n_cand = jnp.sum(flat.astype(jnp.int32))
-    target = jnp.where(flat & (rank < cap), rank, cap)     # cap -> dump slot
-    buf = jnp.zeros((cap + 1,), jnp.int32).at[target].set(
-        jnp.arange(n, dtype=jnp.int32), mode="drop")
-    cand_flat = buf[:cap]
+    m = gate.shape[1]
+    cand_flat, n_cand, overflow = compact_flat(gate, cap)
     kept = jnp.minimum(n_cand, cap)
     cand_valid = jnp.arange(cap, dtype=jnp.int32) < kept
     cand_d = cand_flat // m + 1
     cand_i = cand_flat % m
-    overflow = jnp.maximum(n_cand - cap, 0)
     return (cand_i.astype(jnp.int32), cand_d.astype(jnp.int32), cand_valid,
             n_cand, overflow)
+
+
+def emit_band_indices(band: jax.Array, cap: int) -> dict:
+    """Device-side pair emission (ISSUE 4): compact a boolean band (w-1, M)
+    into a packed flat-index buffer so the host transfers ``cap`` int32
+    slots + a count instead of the whole O(w*M) band.  The same capacity /
+    overflow contract as the SRP shuffle and cand_cap: drops are counted,
+    never silent.  Consumed by ``results.packed_pairs_from_idx`` (host eid
+    translation is vectorized there)."""
+    idx, n_true, overflow = compact_flat(band, cap)
+    return {"idx": idx, "n": jnp.minimum(n_true, cap).astype(jnp.int32),
+            "overflow": overflow.astype(jnp.int32)}
+
+
+def cheap_band_jnp(payload: dict, split: "CascadeSplit",
+                   w: int) -> jax.Array:
+    """Band-shaped jnp evaluation of the cascade's cheap prefix: (w-1, M)
+    unnormalized partial scores ``w_cos*cosine + w_jac*jaccard`` — the same
+    math as the fused Pallas kernel, but computing only the w-1 band scores
+    per row instead of the kernel's 2*block_i-wide tile.
+
+    The tile shape is what the TPU MXU wants; off-TPU it is pure waste
+    (~2*block_i/(w-1) extra cheap evaluations), so the pallas engine uses
+    this path when the interpreter would otherwise run the tile kernel
+    (band_interpret=None off-TPU).  Numerically this matches the scan
+    oracle's per-matcher scores exactly (same jnp ops), so the GATE_EPS
+    guard is strictly slack here."""
+    from repro.core.match import cosine_sim, jaccard_sig
+
+    feat = payload.get(split.feat_field) if split.feat_field else None
+    sig = payload.get(split.sig_field) if split.sig_field else None
+
+    def step(_, d):
+        part = jnp.float32(0.0)
+        if feat is not None:
+            part = part + split.w_cos * cosine_sim(
+                feat, jnp.roll(feat, -d, axis=0))
+        if sig is not None:
+            part = part + split.w_jac * jaccard_sig(
+                sig, jnp.roll(sig, -d, axis=0))
+        return None, part
+
+    _, rows = jax.lax.scan(step, None, jnp.arange(1, w, dtype=jnp.int32))
+    return rows
 
 
 def score_candidates(ents: dict, cand_i, cand_d, cand_valid,
@@ -254,6 +310,13 @@ class BandEngine:
     def band(self, ents: dict, cfg, *, halo_len: int, mode: str) -> dict:
         raise NotImplementedError
 
+    def match_bound(self, ents: dict, cfg) -> Optional[int]:
+        """Static upper bound on True entries in this engine's MATCH band,
+        beyond the band size itself, or None.  Device-side pair emission
+        uses it to shrink the match index buffer (the match band is orders
+        of magnitude sparser than the blocked mask)."""
+        return None
+
     @staticmethod
     def _src(ents: dict, cfg) -> Optional[jax.Array]:
         if getattr(cfg, "linkage", False) and "src" in ents["payload"]:
@@ -343,6 +406,16 @@ class PallasBandEngine(BandEngine):
     a finite cap sized above the survivor count (see DESIGN.md §6) gets
     the cascade cut with zero overflow."""
 
+    def match_bound(self, ents: dict, cfg) -> Optional[int]:
+        """Accepted matches are scattered from the cand_cap buffer, so a
+        finite cand_cap bounds the match band's True count exactly — the
+        emitted match index buffer never needs more slots (unless the
+        cascade falls back to the scan oracle, where no such bound holds)."""
+        if cfg.cand_cap > 0 and \
+                split_cascade(cfg.matcher, ents["payload"]) is not None:
+            return cfg.cand_cap
+        return None
+
     def band(self, ents: dict, cfg, *, halo_len: int, mode: str) -> dict:
         from repro.kernels import ops
 
@@ -357,14 +430,23 @@ class PallasBandEngine(BandEngine):
                          src=self._src(ents, cfg))
 
         payload = ents["payload"]
-        feat = payload[split.feat_field] if split.feat_field else \
-            jnp.zeros((m, 1), jnp.float32)
-        sig = payload[split.sig_field] if split.sig_field else \
-            jnp.zeros((m, 1), jnp.uint32)
-        cheap = ops.fused_cheap_band(
-            feat, sig, window=w - 1, w_cos=split.w_cos, w_jac=split.w_jac,
-            block_i=cfg.band_block, interpret=cfg.band_interpret)
-        gate = (cheap.T >= split.tau_partial) & mask        # (w-1, M)
+        if cfg.band_interpret is None and ops.default_interpret():
+            # auto mode off-TPU: band-shaped jnp cheap stage (the tile
+            # kernel's 2*block_i scores per row only pay off on the MXU;
+            # band_interpret=True still forces the interpreted kernel —
+            # the kernel-validation path the parity tests exercise)
+            cheap_rows = cheap_band_jnp(payload, split, w)  # (w-1, M)
+        else:
+            feat = payload[split.feat_field] if split.feat_field else \
+                jnp.zeros((m, 1), jnp.float32)
+            sig = payload[split.sig_field] if split.sig_field else \
+                jnp.zeros((m, 1), jnp.uint32)
+            cheap = ops.fused_cheap_band(
+                feat, sig, window=w - 1, w_cos=split.w_cos,
+                w_jac=split.w_jac, block_i=cfg.band_block,
+                interpret=cfg.band_interpret)
+            cheap_rows = cheap.T
+        gate = (cheap_rows >= split.tau_partial) & mask     # (w-1, M)
 
         cap = cfg.cand_cap if cfg.cand_cap > 0 else (w - 1) * m
         cand_i, cand_d, cand_valid, n_cand, overflow = \

@@ -1,0 +1,7 @@
+"""``repro.perf`` — performance tooling: HLO analysis + the executable
+cache behind the steady-state hot path (see ``repro.perf.cache``)."""
+from repro.perf.cache import (CacheStats, ExecutableCache, executable_cache,
+                              tree_fingerprint)
+
+__all__ = ["CacheStats", "ExecutableCache", "executable_cache",
+           "tree_fingerprint"]

@@ -113,6 +113,41 @@ def test_linkage_parity(variant):
     assert scan.matches        # planted duplicates must be found
 
 
+@pytest.mark.parametrize("variant", ["srp", "repsn", "jobsn"])
+def test_auto_mode_jnp_cheap_band_parity(ents, bounds, variant):
+    """band_interpret=None off-TPU routes the cheap stage through
+    window.cheap_band_jnp (band-shaped jnp, no tile kernel) — the path
+    every real CPU user of band_engine='pallas' takes; it must reproduce
+    the scan oracle exactly, like the forced-interpreter kernel path the
+    other parity tests pin."""
+    cfg = _cfg(variant=variant, runner="vmap", band_interpret=None)
+    scan = api.resolve(ents, cfg, bounds=bounds)
+    pal = api.resolve(ents, cfg.with_(band_engine="pallas", cand_cap=256),
+                      bounds=bounds)
+    assert pal.blocking.pairs == scan.blocking.pairs
+    assert pal.matches == scan.matches
+    assert pal.blocking.cand_overflow == 0
+
+
+def test_cheap_band_jnp_matches_kernel_math(ents):
+    """The jnp cheap band computes the same weighted partial scores as the
+    matchers it mirrors, row d-1 holding distance-d pairs."""
+    import jax.numpy as jnp
+    from repro.core.match import cosine_sim, jaccard_sig, default_matcher
+    payload = {k: np.asarray(v)[:64] for k, v in ents["payload"].items()}
+    payload = {k: jnp.asarray(v) for k, v in payload.items()}
+    matcher = default_matcher()
+    split = W.split_cascade(matcher, payload)
+    w = 5
+    rows = np.asarray(W.cheap_band_jnp(payload, split, w))
+    for d in range(1, w):
+        want = split.w_cos * cosine_sim(
+            payload["feat"], jnp.roll(payload["feat"], -d, axis=0)) + \
+            split.w_jac * jaccard_sig(
+                payload["sig"], jnp.roll(payload["sig"], -d, axis=0))
+        np.testing.assert_allclose(rows[d - 1], np.asarray(want), rtol=1e-6)
+
+
 def test_cand_cap_overflow_counted(ents, bounds):
     """cand_cap exceeded: counted in cand_overflow, never silent — blocked
     pairs are untouched (pre-compaction mask) and at most cand_overflow
