@@ -26,6 +26,11 @@ stays as an alias of ``steady_seconds`` for downstream readers.
                            corpus (imbalance ratio, planned capacity, wall
                            time, oracle parity) — the BENCH_balance.json
                            baseline
+  * stream_body          — out-of-core streaming (ISSUE 5): chunked
+                           resolve_stream vs monolithic resolve on a corpus
+                           4x the chunk size (steady-state pairs/s, peak
+                           device bytes, pair-set parity for all variants x
+                           engines) — the BENCH_stream.json baseline
 """
 from __future__ import annotations
 
@@ -357,6 +362,88 @@ def balance_body(n: int = 6_000, w: int = 10, r: int = 8,
         "blocksplit": imb["uniform"] / max(imb["blocksplit"], 1e-9),
         "pairrange": imb["uniform"] / max(imb["pairrange"], 1e-9),
     }
+    return out
+
+
+def stream_body(n: int = 24_000, chunk: int = 6_000, w: int = 10,
+                n_keys: int = 2048, r: int = 4, reps: int = 3) -> dict:
+    """Out-of-core streaming vs monolithic resolution (ISSUE 5 acceptance).
+
+    The corpus is ``n = 4x chunk`` entities consumed as a chunk generator;
+    ``resolve_stream`` externally sorts and resolves it chunk-by-chunk with
+    a w-1 seam halo while monolithic ``resolve`` stages everything at once.
+    Reports, per band engine (repsn, the timing workload): cold and steady
+    wall time of both paths (steady = median of ``reps`` blocked warm
+    calls; the stream's warm calls replay the whole sort+merge+resolve
+    pipeline against a hot executable cache), steady-state blocked pairs/s,
+    and the device-residency ratio — peak per-chunk device input bytes over
+    the bytes a monolithic resolve stages (the out-of-core claim, measured
+    from the staged arrays themselves: the process-wide jax allocator
+    high-water mark is monotone and would only echo whichever path ran
+    first).  The parity grid then checks blocked/matched bit-identity
+    stream-vs-monolithic for ALL variants x engines at this scale."""
+    import jax
+    from repro import api, stream
+    from repro.core import entities as E
+    from repro.data.corpus import synth_entity_chunks
+
+    def chunks():
+        return synth_entity_chunks(0, n, chunk, n_keys=n_keys,
+                                   dup_frac=0.2)
+
+    full = E.host_concat([E.to_host(c) for c in chunks()])
+    ents = E.make_entities(full["key"], full["eid"],
+                           payload=full["payload"])
+
+    out = {"n": n, "chunk": chunk, "w": w, "r": r,
+           "backend": jax.default_backend(), "engines": {}, "parity": {}}
+    timed = {}            # repsn results, reused by the parity grid below
+    for engine in ["scan", "pallas"]:
+        cfg = api.ERConfig(window=w, variant="repsn", hops=r - 1,
+                           runner="vmap", num_shards=r, band_engine=engine)
+        mono_cold, mono_steady, mono = _cold_steady(
+            lambda: api.resolve(ents, cfg), steady_reps=reps)
+        s_cold, s_steady, sres = _cold_steady(
+            lambda: stream.resolve_stream(chunks(), cfg, chunk_size=chunk),
+            steady_reps=reps)
+        timed[engine] = (mono, sres)
+        st = sres.stream
+        out["engines"][engine] = {
+            "mono_cold_seconds": mono_cold,
+            "mono_steady_seconds": mono_steady,
+            "stream_cold_seconds": s_cold,
+            "stream_steady_seconds": s_steady,
+            "seconds": s_steady,
+            "pairs": len(sres.pairs),
+            "mono_pairs_per_s": len(mono.pairs) / max(mono_steady, 1e-9),
+            "stream_pairs_per_s": len(sres.pairs) / max(s_steady, 1e-9),
+            "stream_overhead": s_steady / max(mono_steady, 1e-9),
+            "chunks": st.chunks,
+            "steady_chunks": st.steady_chunks,
+            "carry_entities": st.carry_entities,
+            "chunk_device_bytes": st.chunk_device_bytes,
+            "corpus_bytes": st.corpus_bytes,
+            "residency_ratio": st.chunk_device_bytes
+            / max(st.corpus_bytes, 1),
+        }
+    for variant in ["srp", "repsn", "jobsn"]:
+        for engine in ["scan", "pallas"]:
+            if variant == "repsn":        # already resolved by the timing
+                mono, sres = timed[engine]  # loop — don't pay it twice
+            else:
+                cfg = api.ERConfig(window=w, variant=variant, hops=r - 1,
+                                   runner="vmap", num_shards=r,
+                                   band_engine=engine)
+                mono = api.resolve(ents, cfg)
+                sres = stream.resolve_stream(chunks(), cfg,
+                                             chunk_size=chunk)
+            out["parity"][f"{variant}/{engine}"] = {
+                "blocked_equal": sres.pairs == mono.pairs,
+                "matched_equal": sres.matches == mono.matches,
+                "pairs": len(sres.pairs),
+            }
+    out["parity_all"] = all(v["blocked_equal"] and v["matched_equal"]
+                            for v in out["parity"].values())
     return out
 
 

@@ -13,6 +13,9 @@ Tables:
                         pair collection; writes BENCH_band_engine.json
   balance               skew-aware planners (uniform/blocksplit/pairrange)
                         on the Zipfian corpus; writes BENCH_balance.json
+  stream                out-of-core resolve_stream vs monolithic resolve
+                        (pairs/s, peak device bytes, parity for all
+                        variants x engines); writes BENCH_stream.json
   kernels               Pallas band kernels vs jnp oracle (CPU timings)
   dedup_e2e             end-to-end corpus dedup throughput + SN-vs-n^2 factor
   roofline              summary of dry-run roofline terms (needs artifacts)
@@ -127,6 +130,30 @@ def balance(quick: bool):
         json.dump(res, f, indent=2)
 
 
+def stream(quick: bool):
+    """Out-of-core streaming (ISSUE 5): chunked resolve_stream vs
+    monolithic resolve on a corpus 4x the chunk size; persists
+    BENCH_stream.json (the acceptance record: bit-identical pair sets for
+    all variants x engines with per-chunk device residency a fraction of
+    the monolithic staging bytes)."""
+    from benchmarks.bench_sn import stream_body
+    res = stream_body(n=4_800 if quick else 24_000,
+                      chunk=1_200 if quick else 6_000,
+                      w=8 if quick else 10, r=4, reps=3)
+    for engine, v in res["engines"].items():
+        _row(f"stream_{engine}", v["stream_steady_seconds"] * 1e6,
+             f"mono_us={v['mono_steady_seconds'] * 1e6:.0f};"
+             f"stream_pairs_per_s={v['stream_pairs_per_s']:.2e};"
+             f"mono_pairs_per_s={v['mono_pairs_per_s']:.2e};"
+             f"residency={v['residency_ratio']:.3f};"
+             f"steady_chunks={v['steady_chunks']}/{v['chunks']}")
+    _row("stream_parity", 0.0,
+         f"all_equal={res['parity_all']};"
+         f"combos={len(res['parity'])}")
+    with open("BENCH_stream.json", "w") as f:
+        json.dump(res, f, indent=2)
+
+
 def kernels(quick: bool):
     import jax
     import jax.numpy as jnp
@@ -200,6 +227,7 @@ TABLES = {
     "sec52_jobsn_vs_repsn": sec52_jobsn_vs_repsn,
     "band_engine": band_engine,
     "balance": balance,
+    "stream": stream,
     "kernels": kernels,
     "dedup_e2e": dedup_e2e,
     "roofline": roofline,

@@ -28,18 +28,28 @@ Pieces (each importable on its own):
                            blocksplit | pairrange) producing ShardPlans
                            with planned loads + exact capacities, reported
                            back as ERResult.balance
-  * facade.resolve/link    glue the above together
+  * facade.resolve/link    glue the above together — and, under
+                           ``ERConfig.passes`` (multi-pass SN over several
+                           derived sort keys), return a ``MultiPassResult``
+                           with the union + per-pass outcomes
+  * repro.stream           out-of-core streaming twin: ``resolve_stream``
+                           consumes an iterator of chunks, externally
+                           sorts, and resolves chunk-by-chunk with a w-1
+                           seam halo — bit-identical pair sets with device
+                           residency bounded by the chunk size
 """
-from repro.api.config import ERConfig
+from repro.api.config import ERConfig, SortKeySpec
 from repro.api.facade import default_bounds, link, make_runner, resolve
 from repro.api.linkage import sequential_link_pairs, tag_sources
 from repro.api.results import (BalanceMetrics, BlockingResult, ERMetrics,
-                               ERResult, PerfStats, pack_pairs,
-                               packed_pairs_from_band, packed_pairs_from_idx,
-                               packed_pairs_from_part, packed_to_frozenset,
-                               pairs_from_band, unpack_pairs)
-from repro.api.runners import (Runner, RunnerOutcome, SequentialRunner,
-                               ShardMapRunner, VmapRunner, shard_input)
+                               ERResult, MultiPassResult, PerfStats,
+                               pack_pairs, packed_pairs_from_band,
+                               packed_pairs_from_idx, packed_pairs_from_part,
+                               packed_to_frozenset, pairs_from_band,
+                               unpack_pairs)
+from repro.api.runners import (PackedOutcome, Runner, RunnerOutcome,
+                               SequentialRunner, ShardMapRunner, VmapRunner,
+                               shard_input)
 from repro.api.variants import (available_variants, get_variant,
                                 register_variant)
 from repro.balance import (KeyProfile, ShardPlan, available_partitioners,
@@ -49,14 +59,15 @@ from repro.core.window import (available_band_engines, get_band_engine,
                                register_band_engine)
 
 __all__ = [
-    "ERConfig",
+    "ERConfig", "SortKeySpec",
     "resolve", "link", "make_runner", "default_bounds",
     "BlockingResult", "ERResult", "ERMetrics", "BalanceMetrics", "PerfStats",
+    "MultiPassResult",
     "pairs_from_band",
     "packed_pairs_from_band", "packed_pairs_from_idx",
     "packed_pairs_from_part", "pack_pairs", "unpack_pairs",
     "packed_to_frozenset",
-    "Runner", "RunnerOutcome",
+    "Runner", "RunnerOutcome", "PackedOutcome",
     "SequentialRunner", "VmapRunner", "ShardMapRunner", "shard_input",
     "register_variant", "get_variant", "available_variants",
     "register_band_engine", "get_band_engine", "available_band_engines",

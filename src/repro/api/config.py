@@ -8,7 +8,7 @@ boundaries are derived, and whether the run is dual-source linkage.
 from __future__ import annotations
 
 from dataclasses import dataclass, field, replace
-from typing import Optional
+from typing import Optional, Tuple
 
 from repro.core.match import CascadeMatcher, default_matcher
 
@@ -21,6 +21,57 @@ PARTITIONERS = ("balanced", "range", "sample",
                 "uniform", "blocksplit", "pairrange")
 BAND_ENGINES = ("scan", "pallas")
 EMIT_MODES = ("band", "pairs")
+SORT_KEY_KINDS = ("identity", "prefix", "word")
+
+
+@dataclass(frozen=True)
+class SortKeySpec:
+    """One blocking pass of multi-pass SN: how the sort key is derived.
+
+    Multi-pass Sorted Neighborhood (Papadakis et al., arXiv:1905.06167 —
+    the standard recall lever over single-key SN) runs the whole blocking
+    workflow once per sort key and unions the pair sets.  A spec names one
+    derivation, resolved by ``core.keys.derive_sort_key``:
+
+      kind="identity"  use the entity's own ``key`` field (source="key") or
+                       a 1-D integer payload field named by ``source``
+      kind="prefix"    pack ``width`` characters of the padded-byte payload
+                       field ``source``, starting at ``offset``
+                       (``core.keys.prefix_key`` — the paper's "first
+                       letters of the title" key family; shifting ``offset``
+                       per pass is the classic multi-pass choice)
+      kind="word"      column ``index`` of a 2-D integer payload field
+                       ``source`` (e.g. one word of the bit-packed trigram
+                       signature), masked into the int32 key space
+
+    Derived keys are always non-negative int32 < 2^30 (the entities.py key
+    schema).  Specs are frozen/hashable; ``name`` labels the pass in
+    ``MultiPassResult``.
+    """
+    name: str = "key"
+    source: str = "key"
+    kind: str = "identity"
+    offset: int = 0
+    width: int = 2
+    index: int = 0
+
+    def __post_init__(self):
+        if self.kind not in SORT_KEY_KINDS:
+            raise ValueError(f"unknown sort-key kind {self.kind!r}; choose "
+                             f"from {SORT_KEY_KINDS}")
+        if self.kind == "prefix" and not 1 <= self.width <= 5:
+            raise ValueError(f"prefix width must be in 1..5 (int32 key "
+                             f"space), got {self.width}")
+        if self.offset < 0 or self.index < 0:
+            raise ValueError("offset/index must be >= 0")
+        # parameters that would be silently ignored are rejected — a pass
+        # with a mis-applied offset/index quietly derives the WRONG key
+        if self.kind != "prefix" and self.offset:
+            raise ValueError(f"offset only applies to kind='prefix' "
+                             f"(got kind={self.kind!r})")
+        if self.kind != "word" and self.index:
+            raise ValueError(f"index only applies to kind='word' "
+                             f"(got kind={self.kind!r})")
 
 
 @dataclass(frozen=True)
@@ -96,6 +147,17 @@ class ERConfig:
                        blocked/matched (entities carry a "src" payload tag)
       compute_metrics  run the host oracle and attach reduction-ratio /
                        pairs-completeness metrics to the result
+      passes           multi-pass SN (empty = single pass on the entity
+                       ``key``): one SortKeySpec per blocking pass.  The
+                       whole variant x runner x engine pipeline runs once
+                       per derived sort key and ``resolve``/``link`` return
+                       a ``MultiPassResult`` whose union pair set is the
+                       recall lever of the blocking survey (arXiv:
+                       1905.06167); per-pass results keep their own
+                       overflow/metrics accounting.  Orchestrated host-side
+                       — passes do NOT enter ``static_fingerprint`` (each
+                       pass reuses the single-pass executable; only the key
+                       VALUES differ)
     """
     window: int = 10
     variant: str = "repsn"
@@ -119,8 +181,14 @@ class ERConfig:
 
     linkage: bool = False
     compute_metrics: bool = False
+    passes: Tuple[SortKeySpec, ...] = ()
 
     def __post_init__(self):
+        if not isinstance(self.passes, tuple) or any(
+                not isinstance(p, SortKeySpec) for p in self.passes):
+            raise ValueError("passes must be a tuple of SortKeySpec")
+        if len({p.name for p in self.passes}) != len(self.passes):
+            raise ValueError("pass names must be unique")
         if self.window < 2:
             raise ValueError(f"window must be >= 2, got {self.window}")
         if self.runner not in RUNNERS:
@@ -178,8 +246,10 @@ class ERConfig:
         Two configs with equal fingerprints lower to the same program for
         same-shaped inputs; fields that only steer host-side planning or
         result assembly (runner, num_shards, partitioner, compute_metrics,
-        jit_cache) are deliberately excluded so e.g. switching partitioners
-        reuses the compiled executable (boundaries are traced arguments)."""
+        jit_cache, passes — each blocking pass reruns the same program on
+        re-derived key values) are deliberately excluded so e.g. switching
+        partitioners reuses the compiled executable (boundaries are traced
+        arguments)."""
         return ("ERConfig", self.window, self.variant, self.hops,
                 self.cap_factor, self.matcher, self.return_scores,
                 self.band_engine, self.band_block, self.cand_cap,

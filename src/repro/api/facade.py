@@ -20,9 +20,10 @@ from repro import balance as B
 from repro.api import linkage as LK
 from repro.api.config import ERConfig
 from repro.api.results import (BalanceMetrics, BlockingResult, ERResult,
-                               PerfStats, compute_metrics)
+                               MultiPassResult, PerfStats, compute_metrics)
 from repro.api.runners import (Runner, SequentialRunner, ShardMapRunner,
                                VmapRunner)
+from repro.core import keys as K
 from repro.core import sn
 from repro.perf import cache as PC
 
@@ -92,13 +93,20 @@ def _balance_metrics(plan: B.ShardPlan, out, window: int):
 
 
 def resolve(ents: dict, cfg: ERConfig, *, bounds=None, mesh=None,
-            axis: str = "data") -> ERResult:
+            axis: str = "data"):
     """Run the configured ER pipeline over one entity set.
 
     ``bounds``: explicit partition boundaries ((r-1,) int32) or a
     ``repro.balance.ShardPlan``; planned from ``cfg.partitioner`` when
     omitted.  ``mesh``/``axis`` only matter for the shard_map runner
-    (default: all local devices on a 1-D mesh)."""
+    (default: all local devices on a 1-D mesh).
+
+    Returns an ``ERResult`` — or, when ``cfg.passes`` selects multi-pass
+    blocking, a ``MultiPassResult`` holding the per-pass ERResults plus the
+    union pair sets."""
+    if cfg.passes:
+        return _resolve_multipass(ents, cfg, bounds=bounds, mesh=mesh,
+                                  axis=axis)
     runner = make_runner(cfg, mesh=mesh, axis=axis)
     n_valid = int(np.asarray(ents["valid"]).sum())
     if bounds is None:
@@ -125,11 +133,11 @@ def resolve(ents: dict, cfg: ERConfig, *, bounds=None, mesh=None,
                 f"bounds define {plan.num_shards} partitions but only "
                 f"{n_valid} valid entities exist; use fewer partitions")
     cache = PC.executable_cache()
-    h0, m0, t0 = cache.stats.snapshot()
+    before = cache.stats.snapshot()
     out = runner.resolve(ents, plan, cfg)
-    h1, m1, t1 = cache.stats.snapshot()
-    perf = PerfStats(cache_hits=h1 - h0, cache_misses=m1 - m0,
-                     traces=t1 - t0, cache_entries=len(cache))
+    dh, dm, dt = cache.stats.delta(before)
+    perf = PerfStats(cache_hits=dh, cache_misses=dm, traces=dt,
+                     cache_entries=len(cache))
 
     blocking = BlockingResult(pairs=out.blocked, load=out.load,
                               overflow=out.overflow, variant=cfg.variant,
@@ -158,21 +166,107 @@ def resolve(ents: dict, cfg: ERConfig, *, bounds=None, mesh=None,
                     balance=balance, perf=perf)
 
 
+def _rekeyed(ents: dict, spec) -> dict:
+    """Entity set with its sort key replaced by ``spec``'s derivation (the
+    per-pass view multi-pass blocking resolves; payload/eid/valid shared)."""
+    return {"key": K.derive_sort_key(ents, spec), "eid": ents["eid"],
+            "valid": ents["valid"], "payload": ents["payload"]}
+
+
+def union_blocking(results, cfg, runner_name: str) -> BlockingResult:
+    """Union BlockingResult across passes: pair union + additive accounting
+    (``load`` stays empty — per-pass shard loads live on the pass results).
+    ``results`` is any sequence of objects carrying ``.blocking`` — the ONE
+    implementation behind both ``MultiPassResult`` (here) and the streaming
+    union (``repro.stream``), so a counter added to BlockingResult
+    aggregates identically in both."""
+    union = frozenset().union(*(r.blocking.pairs for r in results))
+    return BlockingResult(
+        pairs=union, load=(),
+        overflow=sum(r.blocking.overflow for r in results),
+        variant=cfg.variant, runner=runner_name, window=cfg.window,
+        num_shards=results[0].blocking.num_shards,
+        cand_overflow=sum(r.blocking.cand_overflow for r in results),
+        matcher_evals=sum(r.blocking.matcher_evals for r in results),
+        pair_overflow=sum(r.blocking.pair_overflow for r in results))
+
+
+def _resolve_multipass(ents: dict, cfg: ERConfig, *, bounds, mesh,
+                       axis: str) -> MultiPassResult:
+    """One full single-pass resolve per SortKeySpec + the pair-set union.
+
+    Explicit ``bounds`` are rejected: boundaries live in ONE key space and
+    each pass sorts by a different derived key — per-pass boundaries are
+    planned from ``cfg.partitioner`` instead.
+
+    When metrics are requested, each pass's sequential host oracle is
+    computed ONCE here (per-pass resolves run metric-less) and serves both
+    the pass's own metrics and the union metrics — the O(n·w) host oracle
+    is the dominant metrics cost and must not be paid twice per pass."""
+    if bounds is not None:
+        raise ValueError(
+            "explicit bounds cannot be shared across multi-pass sort keys "
+            "(each pass sorts by a different derived key); drop bounds and "
+            "let cfg.partitioner plan each pass, or run passes manually")
+    from dataclasses import replace
+
+    sub = cfg.with_(passes=(), compute_metrics=False)
+    results = []
+    union_oracle: set = set()
+    for spec in cfg.passes:
+        pents = _rekeyed(ents, spec)
+        res = resolve(pents, sub, mesh=mesh, axis=axis)
+        if cfg.compute_metrics:
+            oracle = _host_oracle(pents, sub)
+            union_oracle |= oracle
+            res = replace(res, metrics=replace(
+                compute_metrics(res.blocking.pairs, oracle,
+                                _total_comparisons(ents, cfg)),
+                balance=res.balance))
+        results.append(res)
+    results = tuple(results)
+    matches = frozenset().union(*(r.matches for r in results))
+    blocking = union_blocking(results, cfg, results[0].blocking.runner)
+    metrics = None
+    if cfg.compute_metrics:
+        metrics = compute_metrics(blocking.pairs, union_oracle,
+                                  _total_comparisons(ents, cfg))
+    return MultiPassResult(passes=results,
+                           pass_names=tuple(p.name for p in cfg.passes),
+                           blocking=blocking, matches=matches,
+                           metrics=metrics)
+
+
+def _untag_blocking(b: BlockingResult, offset: int) -> BlockingResult:
+    """Map a BlockingResult's pairs from the merged linkage eid space back
+    to (lhs_eid, rhs_eid); every other field is carried through (``replace``
+    so future counters survive without touching this code)."""
+    from dataclasses import replace
+    return replace(b, pairs=frozenset(LK.untag_pairs(b.pairs, offset)))
+
+
 def link(lhs: dict, rhs: dict, cfg: ERConfig, *, bounds=None, mesh=None,
-         axis: str = "data") -> ERResult:
+         axis: str = "data"):
     """Dual-source linkage R x S: blocked/matched pairs are CROSS-SOURCE
     only, returned as (lhs_eid, rhs_eid) tuples in each source's original id
-    space.  Both sources must share the same payload schema."""
+    space.  Both sources must share the same payload schema.
+
+    Returns an ``ERResult`` (or ``MultiPassResult`` under ``cfg.passes``,
+    with union and per-pass pairs all mapped back to source id spaces)."""
     cfg = cfg.with_(linkage=True)
     ents, offset = LK.tag_sources(lhs, rhs)
     res = resolve(ents, cfg, bounds=bounds, mesh=mesh, axis=axis)
-    b = res.blocking
-    blocking = BlockingResult(
-        pairs=frozenset(LK.untag_pairs(b.pairs, offset)), load=b.load,
-        overflow=b.overflow, variant=b.variant, runner=b.runner,
-        window=b.window, num_shards=b.num_shards, cand_count=b.cand_count,
-        cand_overflow=b.cand_overflow, matcher_evals=b.matcher_evals,
-        pair_overflow=b.pair_overflow)
-    return ERResult(blocking=blocking,
+    if isinstance(res, MultiPassResult):
+        passes = tuple(
+            ERResult(blocking=_untag_blocking(r.blocking, offset),
+                     matches=frozenset(LK.untag_pairs(r.matches, offset)),
+                     metrics=r.metrics, balance=r.balance, perf=r.perf)
+            for r in res.passes)
+        return MultiPassResult(
+            passes=passes, pass_names=res.pass_names,
+            blocking=_untag_blocking(res.blocking, offset),
+            matches=frozenset(LK.untag_pairs(res.matches, offset)),
+            metrics=res.metrics)
+    return ERResult(blocking=_untag_blocking(res.blocking, offset),
                     matches=frozenset(LK.untag_pairs(res.matches, offset)),
                     metrics=res.metrics, balance=res.balance, perf=res.perf)

@@ -156,10 +156,14 @@ class BlockingResult:
 
     @property
     def max_load(self) -> int:
+        """Largest per-shard valid count — the straggler's load (wall-clock
+        scales with this, not the mean)."""
         return max(self.load) if self.load else 0
 
     @property
     def total_load(self) -> int:
+        """Sum of per-shard valid counts (== entities that survived the
+        shuffle; compare with the input n to spot capacity overflow)."""
         return sum(self.load)
 
 
@@ -179,7 +183,42 @@ class ERResult:
 
     @property
     def pairs(self) -> FrozenSet[Pair]:
+        """The blocked (candidate) pair set — sugar for blocking.pairs."""
         return self.blocking.pairs
+
+
+@dataclass(frozen=True)
+class MultiPassResult:
+    """Outcome of a multi-pass run (``ERConfig.passes`` non-empty).
+
+    One full ER pipeline execution per ``SortKeySpec``; the top-level
+    ``blocking``/``matches`` hold the UNION across passes (the recall
+    lever: a pair blocked by any pass is blocked), while ``passes`` keeps
+    each pass's complete single-pass ``ERResult`` — per-pass loads,
+    overflow, balance, and perf stay individually auditable.  The union
+    ``blocking`` aggregates accounting additively (overflow / cand_overflow
+    / pair_overflow / matcher_evals are summed; ``load`` is left empty —
+    per-pass shard loads live on ``passes[i].blocking.load``).  ``metrics``
+    (when requested) compares the union pair set against the union of the
+    per-pass sequential oracles."""
+    passes: Tuple[ERResult, ...]
+    pass_names: Tuple[str, ...]
+    blocking: BlockingResult
+    matches: FrozenSet[Pair]
+    metrics: Optional[ERMetrics] = None
+
+    @property
+    def pairs(self) -> FrozenSet[Pair]:
+        """The union blocked pair set — sugar for blocking.pairs."""
+        return self.blocking.pairs
+
+    def pass_result(self, name: str) -> ERResult:
+        """The single-pass ERResult for the pass named ``name``."""
+        try:
+            return self.passes[self.pass_names.index(name)]
+        except ValueError:
+            raise KeyError(f"no pass named {name!r}; passes: "
+                           f"{self.pass_names}") from None
 
 
 # -- pair extraction (band mask -> host pairs) --------------------------------------
@@ -252,6 +291,11 @@ def pairs_from_band(part: dict, field: str = "match") -> Set[Pair]:
 
 def compute_metrics(blocked: FrozenSet[Pair], oracle: Set[Pair],
                     total_comparisons: int) -> ERMetrics:
+    """Standard blocking-quality metrics of ``blocked`` against the
+    sequential-SN ``oracle`` pair set: reduction ratio = 1 − |blocked| /
+    ``total_comparisons`` (the full comparison space) and pairs
+    completeness = |blocked ∩ oracle| / |oracle| (1.0 when no oracle pair
+    was lost; degenerate inputs score 1.0 by convention)."""
     n_oracle = len(oracle)
     pc = 1.0 if n_oracle == 0 else len(blocked & oracle) / n_oracle
     rr = 1.0 if total_comparisons <= 0 else \

@@ -107,14 +107,57 @@ class RunnerOutcome(NamedTuple):
     #                             never silent — can lose blocked pairs)
 
 
+class PackedOutcome(NamedTuple):
+    """``RunnerOutcome``'s packed-array twin: identical accounting, but the
+    pair sets stay as deduplicated PACKED uint64 arrays (``(lo << 32) |
+    hi``, see ``results.pack_pairs``).
+
+    This is the collection hot path for callers that aggregate MANY runner
+    invocations — ``repro.stream`` unions one of these per chunk with a
+    single ``np.unique`` at the end, instead of materializing a Python
+    frozenset per chunk.  ``to_outcome()`` converts to the public tuple-set
+    form (the one place Python pair objects appear)."""
+    blocked: "np.ndarray"
+    matched: "np.ndarray"
+    load: Tuple[int, ...]
+    overflow: int
+    num_shards: int
+    cand_count: Tuple[int, ...] = ()
+    cand_overflow: int = 0
+    matcher_evals: int = 0
+    pair_overflow: int = 0
+
+    def to_outcome(self) -> RunnerOutcome:
+        """Materialize the public RunnerOutcome (frozensets of (lo, hi))."""
+        return RunnerOutcome(
+            blocked=RES.packed_to_frozenset(self.blocked),
+            matched=RES.packed_to_frozenset(self.matched),
+            load=self.load, overflow=self.overflow,
+            num_shards=self.num_shards, cand_count=self.cand_count,
+            cand_overflow=self.cand_overflow,
+            matcher_evals=self.matcher_evals,
+            pair_overflow=self.pair_overflow)
+
+
 @runtime_checkable
 class Runner(Protocol):
+    """The execution contract every runner satisfies (see module doc)."""
+
     name: str
 
     @property
-    def shards(self) -> int: ...
+    def shards(self) -> int:
+        """Number of shards this runner executes (r)."""
+        ...
 
-    def resolve(self, ents: dict, bounds, cfg) -> RunnerOutcome: ...
+    def resolve(self, ents: dict, bounds, cfg) -> RunnerOutcome:
+        """Run blocking + matching; pair sets as frozensets of (lo, hi)."""
+        ...
+
+    def resolve_packed(self, ents: dict, bounds, cfg) -> PackedOutcome:
+        """Like ``resolve`` but pair sets stay packed uint64 arrays (the
+        aggregation hot path — see ``PackedOutcome``)."""
+        ...
 
 
 def shard_input(ents: dict, r: int) -> dict:
@@ -128,7 +171,9 @@ def shard_input(ents: dict, r: int) -> dict:
         lambda x: x.reshape((r, cap0) + x.shape[1:]), padded)
 
 
-def _device_outcome(out: dict, cfg, r: int) -> RunnerOutcome:
+def _device_outcome_packed(out: dict, cfg, r: int) -> PackedOutcome:
+    """Stacked device output -> PackedOutcome (collection + accounting; the
+    shared back half of every device runner's resolve/resolve_packed)."""
     variant = get_variant(cfg.variant)
     col = variant.collect(out)
     load = tuple(int(x) for x in np.asarray(out["load"])[0])
@@ -144,8 +189,7 @@ def _device_outcome(out: dict, cfg, r: int) -> RunnerOutcome:
                 pair_overflow += \
                     int(np.asarray(out[p]["mask_overflow"]).sum()) + \
                     int(np.asarray(out[p]["match_overflow"]).sum())
-    return RunnerOutcome(blocked=RES.packed_to_frozenset(col.blocked),
-                         matched=RES.packed_to_frozenset(col.matched),
+    return PackedOutcome(blocked=col.blocked, matched=col.matched,
                          load=load, overflow=overflow, num_shards=r,
                          cand_count=tuple(int(c) for c in cand_count),
                          cand_overflow=cand_overflow,
@@ -161,9 +205,15 @@ class VmapRunner:
 
     @property
     def shards(self) -> int:
+        """Number of vmapped shards (== cfg.num_shards)."""
         return self.num_shards
 
     def run_raw(self, ents: dict, bounds, cfg) -> dict:
+        """Execute the variant's shard program and return the STACKED
+        per-shard output dict (band masks / emitted index buffers, halos,
+        accounting — leading dim r) without host collection; benchmarks and
+        invariant tests read this, ``resolve`` consumes it.  Routed through
+        the executable cache unless ``cfg.jit_cache`` is off."""
         r = self.num_shards
         variant = get_variant(cfg.variant)
         ents, b, cap_link = _apply_plan(ents, bounds, r, cfg)
@@ -185,8 +235,13 @@ class VmapRunner:
         return call(stacked, b)
 
     def resolve(self, ents: dict, bounds, cfg) -> RunnerOutcome:
-        return _device_outcome(self.run_raw(ents, bounds, cfg), cfg,
-                               self.num_shards)
+        """Run blocking + matching on r vmapped shards; see ``Runner``."""
+        return self.resolve_packed(ents, bounds, cfg).to_outcome()
+
+    def resolve_packed(self, ents: dict, bounds, cfg) -> PackedOutcome:
+        """``resolve`` with pair sets left as packed uint64 arrays."""
+        return _device_outcome_packed(self.run_raw(ents, bounds, cfg), cfg,
+                                      self.num_shards)
 
 
 @dataclass(frozen=True)
@@ -205,9 +260,14 @@ class ShardMapRunner:
 
     @property
     def shards(self) -> int:
+        """Number of shards == devices on the mesh axis."""
         return int(self.mesh.shape[self.axis])
 
     def run_raw(self, ents: dict, bounds, cfg) -> dict:
+        """Execute the variant's shard program under ``shard_map`` and
+        return the stacked per-shard output dict (leading dim r, exactly
+        like ``VmapRunner.run_raw``); cached/jitted per (mesh, config
+        statics, shapes) unless ``cfg.jit_cache`` is off."""
         import warnings
         with warnings.catch_warnings():
             warnings.simplefilter("ignore", DeprecationWarning)
@@ -252,8 +312,13 @@ class ShardMapRunner:
         return call(stacked, b)
 
     def resolve(self, ents: dict, bounds, cfg) -> RunnerOutcome:
-        return _device_outcome(self.run_raw(ents, bounds, cfg), cfg,
-                               self.shards)
+        """Run blocking + matching on the mesh shards; see ``Runner``."""
+        return self.resolve_packed(ents, bounds, cfg).to_outcome()
+
+    def resolve_packed(self, ents: dict, bounds, cfg) -> PackedOutcome:
+        """``resolve`` with pair sets left as packed uint64 arrays."""
+        return _device_outcome_packed(self.run_raw(ents, bounds, cfg), cfg,
+                                      self.shards)
 
 
 @dataclass(frozen=True)
@@ -266,9 +331,16 @@ class SequentialRunner:
 
     @property
     def shards(self) -> int:
+        """Default partition count (a ShardPlan passed to resolve wins)."""
         return self.num_shards
 
     def resolve(self, ents: dict, bounds, cfg) -> RunnerOutcome:
+        """Variant-faithful host resolve; see ``Runner``."""
+        return self.resolve_packed(ents, bounds, cfg).to_outcome()
+
+    def resolve_packed(self, ents: dict, bounds, cfg) -> PackedOutcome:
+        """``resolve`` with pair sets left as packed uint64 arrays (the
+        internal representation this runner already uses)."""
         plan = as_plan(bounds)
         bounds = np.asarray(plan.bounds)
         r = plan.num_shards
@@ -286,8 +358,7 @@ class SequentialRunner:
         matched = self._match(ents, blocked, cfg)
 
         load = tuple(np.bincount(part, minlength=r).astype(int).tolist())
-        return RunnerOutcome(blocked=RES.packed_to_frozenset(blocked),
-                             matched=RES.packed_to_frozenset(matched),
+        return PackedOutcome(blocked=blocked, matched=matched,
                              load=load, overflow=0, num_shards=r,
                              matcher_evals=int(blocked.size))
 

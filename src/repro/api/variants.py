@@ -46,6 +46,8 @@ def register_variant(name: str):
 
 
 def get_variant(name: str) -> "VariantBase":
+    """Instantiate the registered variant named ``name`` (raises
+    ``ValueError`` listing the registry when unknown)."""
     try:
         return _REGISTRY[name]()
     except KeyError:
@@ -54,6 +56,7 @@ def get_variant(name: str) -> "VariantBase":
 
 
 def available_variants() -> Tuple[str, ...]:
+    """Sorted names of every registered SN variant."""
     return tuple(sorted(_REGISTRY))
 
 
@@ -70,6 +73,11 @@ class VariantBase:
 
     def shard_program(self, ents: dict, bounds: jax.Array, r: int,
                       axis: str, cfg, cap_link: int = None) -> dict:
+        """The per-shard collective program (runs under vmap-with-axis-name
+        or shard_map): SRP shuffle + this variant's ``_windows`` step.
+        Returns the per-shard output dict (``overflow``, ``load``, one band
+        part per ``self.parts``).  ``cap_link`` is the planner-provided
+        shuffle capacity; None derives it from ``cfg.cap_factor``."""
         # capacity precedence: planner-provided cap_link (exact, from the
         # ShardPlan) > cfg.cap_factor > full capacity (never overflows)
         cap0 = ents["key"].shape[0]
@@ -163,6 +171,9 @@ class SrpVariant(VariantBase):
         return {"main": self._band(sorted_ents, 0, "all", cfg)}
 
     def sequential_pairs(self, keys, eids, bounds, w, part=None):
+        """SRP's host oracle: SN pairs WITHIN each partition only (``part``
+        per-entity ids win over the ``bounds`` key map) — boundary pairs
+        are missed by design, exactly like the device program."""
         if part is None:
             part = np.searchsorted(np.asarray(bounds), keys, side="left")
         pairs: Set[Tuple[int, int]] = set()

@@ -25,14 +25,15 @@ shard programs):
 from repro.balance.planners import (LEGACY_PARTITIONERS, Partitioner,
                                     ShardPlan, as_plan,
                                     available_partitioners, get_partitioner,
-                                    imbalance_ratio, plan_shards,
-                                    realized_comparisons,
-                                    register_partitioner)
+                                    imbalance_ratio, plan_from_profile,
+                                    plan_shards, realized_comparisons,
+                                    register_partitioner, validate_plan)
 from repro.balance.profile import KeyProfile, profile_keys
 
 __all__ = [
     "KeyProfile", "profile_keys",
-    "ShardPlan", "Partitioner", "plan_shards", "as_plan",
+    "ShardPlan", "Partitioner", "plan_shards", "plan_from_profile",
+    "as_plan", "validate_plan",
     "register_partitioner", "get_partitioner", "available_partitioners",
     "imbalance_ratio", "realized_comparisons",
     "LEGACY_PARTITIONERS",

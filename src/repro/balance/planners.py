@@ -34,7 +34,7 @@ hold unchanged), and ``cap_link`` feeds the variants' padded capacities.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Dict, Optional, Tuple, Type
 
 import numpy as np
@@ -65,6 +65,12 @@ class ShardPlan:
     cap_link      planned per-(mapper, destination) bucket capacity for the
                   SRP shuffle — exact (no overflow) and halo-legal
                   (r*cap_link >= w-1).  None -> derive from cfg.cap_factor.
+    rank_granular True when some boundary falls INSIDE a key block, so
+                  routing by key bounds alone would be wrong: entities must
+                  be assigned by sorted rank (``dest`` when present, or the
+                  caller's own rank bookkeeping — ``repro.stream`` routes
+                  chunks of the globally merged stream by rank against
+                  ``rank_bounds``).
     """
     partitioner: str
     num_shards: int
@@ -75,6 +81,7 @@ class ShardPlan:
     planned_comparisons: Optional[np.ndarray] = None
     halo: Optional[np.ndarray] = None
     cap_link: Optional[int] = None
+    rank_granular: bool = False
 
     @property
     def imbalance(self) -> float:
@@ -98,6 +105,12 @@ class ShardPlan:
         if self.dest is not None:
             d = np.asarray(self.dest)
             return d[np.asarray(valid)] if valid is not None else d
+        if self.rank_granular:
+            raise ValueError(
+                "rank-granular plan carries no per-entity dest: assignment "
+                "must be derived from sorted ranks against rank_bounds "
+                "(plan_shards attaches dest; repro.stream routes by global "
+                "rank)")
         keys = np.asarray(keys)
         if valid is not None:
             keys = keys[np.asarray(valid)]
@@ -151,6 +164,8 @@ def register_partitioner(name: str):
 
 
 def get_partitioner(name: str) -> "Partitioner":
+    """Instantiate the registered partition planner named ``name`` (raises
+    ``ValueError`` listing registry + legacy names when unknown)."""
     try:
         return _PLANNERS[name]()
     except KeyError:
@@ -161,6 +176,8 @@ def get_partitioner(name: str) -> "Partitioner":
 
 
 def available_partitioners() -> Tuple[str, ...]:
+    """Sorted names of every registered partition planner (legacy names —
+    balanced | range | sample — live outside the registry)."""
     return tuple(sorted(_PLANNERS))
 
 
@@ -177,6 +194,8 @@ class Partitioner:
 
     def boundary_ranks(self, profile: KeyProfile,
                        r: int) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+        """Choose the r−1 shard boundaries for ``profile`` (see class doc
+        for the (rank_bounds, key_bounds | None) contract)."""
         raise NotImplementedError
 
 
@@ -186,6 +205,8 @@ class UniformPartitioner(Partitioner):
     the baseline every balance benchmark measures skew against."""
 
     def boundary_ranks(self, profile, r):
+        """Even key-space boundaries over [min key, max key]; always on
+        block edges, so key_bounds are returned alongside the ranks."""
         lo, hi = int(profile.uniq[0]), int(profile.uniq[-1])
         span = hi - lo + 1
         key_bounds = lo + (np.arange(1, r, dtype=np.int64) * span) // r
@@ -202,6 +223,8 @@ class BlockSplitPartitioner(Partitioner):
     split mid-block at the exact rank (rank-granular routing)."""
 
     def boundary_ranks(self, profile, r):
+        """Greedy comparison-balancing walk (see class doc); key_bounds is
+        None exactly when some oversized block was split mid-block."""
         n, w = profile.n, profile.window
         cum_n = profile.cum_entities
         cum_c = profile.cum_comparisons
@@ -252,6 +275,8 @@ class PairRangePartitioner(Partitioner):
     edges entirely — the finest balance, always rank-granular."""
 
     def boundary_ranks(self, profile, r):
+        """Boundary ranks at exact comparison-count quantiles (inverse cost
+        model); always rank-granular, so key_bounds is always None."""
         n, w = profile.n, profile.window
         total = profile.total_comparisons
         edges = [W.rank_for_prefix_comparisons(total * (s + 1) / r, w)
@@ -299,12 +324,14 @@ def _planned_cap_link(assign_valid: np.ndarray, valid_pos: np.ndarray,
     return max(need, halo_floor, 1)
 
 
-def _validate_plan(plan: ShardPlan, cfg, n_valid: int) -> None:
+def validate_plan(plan: ShardPlan, cfg, n_valid: int) -> None:
     """Reject planner/config combinations that would SILENTLY truncate a
     shard's halo (satellite of ISSUE 3): pairs lost with zero overflow
     accounting.  Applies to halo-slicing variants under profile-backed
     plans; capacity overflow (cap_factor too tight) stays an accounted
-    outcome, not an error."""
+    outcome, not an error.  ``plan_shards`` calls this on every plan it
+    builds; ``repro.stream`` calls it once on the GLOBAL plan so a config
+    the monolithic facade would reject fails the stream loudly too."""
     from repro.api.variants import get_variant     # lazy: avoid import cycle
     variant = get_variant(cfg.variant)
     if not variant.halo_slices or plan.planned_load is None:
@@ -349,6 +376,52 @@ def _validate_plan(plan: ShardPlan, cfg, n_valid: int) -> None:
                 f"hops={r - 1}, lower num_shards, or lower window")
 
 
+def plan_from_profile(profile: KeyProfile, partitioner: str,
+                      r: int) -> ShardPlan:
+    """Plan shard boundaries from a ``KeyProfile`` ALONE — the streaming
+    planning hook: no entity arrays are needed, so a profile merged
+    incrementally across chunks (``KeyProfile.merge``) plans exactly like
+    the monolithic ``plan_shards`` would on the full corpus.
+
+    Handles both the planner registry and the legacy names (boundaries
+    reconstructed from the profile's sorted key multiset — exact, since the
+    legacy derivations only read sorted keys).  The returned plan carries
+    boundaries, planned stats, and the ``rank_granular`` flag, but neither
+    per-entity ``dest`` nor ``cap_link`` (those need the concrete entity
+    layout; ``plan_shards`` attaches them, and ``repro.stream`` routes each
+    chunk by global rank against ``rank_bounds`` instead)."""
+    if profile.n == 0:
+        bounds = np.asarray(P.manual_partition(range(1, r)) if r > 1
+                            else P.manual_partition([]))
+        return ShardPlan(partitioner=partitioner, num_shards=r,
+                         bounds=bounds.astype(np.int32))
+    if partitioner in LEGACY_PARTITIONERS:
+        sorted_keys = np.repeat(profile.uniq, profile.counts)
+        bounds = _legacy_bounds(sorted_keys, partitioner, r) \
+            .astype(np.int32)
+        rank_bounds = profile.rank_after_key(bounds)
+        load, comp, halo = _plan_stats(profile, rank_bounds)
+        return ShardPlan(partitioner=partitioner, num_shards=r,
+                         bounds=bounds, rank_bounds=rank_bounds,
+                         planned_load=load, planned_comparisons=comp,
+                         halo=halo)
+    planner = get_partitioner(partitioner)
+    rank_bounds, key_bounds = planner.boundary_ranks(profile, r)
+    rank_bounds = np.asarray(rank_bounds, np.int64)
+    load, comp, halo = _plan_stats(profile, rank_bounds)
+    if key_bounds is None:
+        # key-view bounds are telemetry only: the key of the last entity of
+        # each shard (routing must happen by rank — rank_granular)
+        bounds = np.asarray(profile.key_at_rank(
+            np.maximum(rank_bounds - 1, 0)), np.int64).astype(np.int32)
+    else:
+        bounds = np.asarray(key_bounds, np.int64).astype(np.int32)
+    return ShardPlan(partitioner=partitioner, num_shards=r, bounds=bounds,
+                     rank_bounds=rank_bounds, planned_load=load,
+                     planned_comparisons=comp, halo=halo,
+                     rank_granular=key_bounds is None)
+
+
 def plan_shards(ents: dict, cfg, r: int) -> ShardPlan:
     """Profile ``ents`` and build the ShardPlan for ``cfg.partitioner``.
 
@@ -361,55 +434,34 @@ def plan_shards(ents: dict, cfg, r: int) -> ShardPlan:
     keys_all = np.asarray(ents["key"])
     keys = keys_all[valid]
     if keys.size == 0:
-        bounds = np.asarray(P.manual_partition(range(1, r)) if r > 1
-                            else P.manual_partition([]))
-        return ShardPlan(partitioner=cfg.partitioner, num_shards=r,
-                         bounds=bounds.astype(np.int32))
+        return plan_from_profile(KeyProfile.empty(cfg.window),
+                                 cfg.partitioner, r)
     profile = profile_keys(keys, window=cfg.window)
+    plan = plan_from_profile(profile, cfg.partitioner, r)
 
     if cfg.partitioner in LEGACY_PARTITIONERS:
-        bounds = _legacy_bounds(keys, cfg.partitioner, r).astype(np.int32)
-        rank_bounds = profile.rank_after_key(bounds)
-        load, comp, halo = _plan_stats(profile, rank_bounds)
-        plan = ShardPlan(partitioner=cfg.partitioner, num_shards=r,
-                         bounds=bounds, rank_bounds=rank_bounds,
-                         planned_load=load, planned_comparisons=comp,
-                         halo=halo)
         # legacy plans are profile-backed too: a halo-truncating combination
         # is just as silent there, so it is rejected the same way
-        _validate_plan(plan, cfg, int(keys.shape[0]))
+        validate_plan(plan, cfg, int(keys.shape[0]))
         return plan
 
-    planner = get_partitioner(cfg.partitioner)
-    rank_bounds, key_bounds = planner.boundary_ranks(profile, r)
-    load, comp, halo = _plan_stats(profile, rank_bounds)
-
     dest = None
-    if key_bounds is None:
+    if plan.rank_granular:
         # rank-granular plan: route by explicit per-entity destination
         eids = np.asarray(ents["eid"])[valid]
         order = np.lexsort((eids, keys))
         ranks = np.empty(keys.shape[0], np.int64)
         ranks[order] = np.arange(keys.shape[0])
-        assign_valid = np.searchsorted(rank_bounds, ranks,
+        assign_valid = np.searchsorted(plan.rank_bounds, ranks,
                                        side="right").astype(np.int32)
         dest = np.zeros(keys_all.shape[0], np.int32)
         dest[np.flatnonzero(valid)] = assign_valid
-        # key-view bounds (telemetry / sequential fallbacks): the key of the
-        # last entity of each shard
-        bounds = np.asarray(profile.key_at_rank(
-            np.maximum(rank_bounds - 1, 0)), np.int64).astype(np.int32)
     else:
-        bounds = np.asarray(key_bounds, np.int64).astype(np.int32)
-        assign_valid = np.searchsorted(bounds, keys,
+        assign_valid = np.searchsorted(plan.bounds, keys,
                                        side="left").astype(np.int32)
 
     cap_link = _planned_cap_link(assign_valid, np.flatnonzero(valid),
                                  keys_all.shape[0], r, cfg.window)
-    plan = ShardPlan(partitioner=cfg.partitioner, num_shards=r,
-                     bounds=bounds, rank_bounds=np.asarray(rank_bounds,
-                                                           np.int64),
-                     dest=dest, planned_load=load, planned_comparisons=comp,
-                     halo=halo, cap_link=cap_link)
-    _validate_plan(plan, cfg, int(keys.shape[0]))
+    plan = replace(plan, dest=dest, cap_link=cap_link)
+    validate_plan(plan, cfg, int(keys.shape[0]))
     return plan

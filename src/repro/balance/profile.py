@@ -56,14 +56,18 @@ class KeyProfile:
 
     @property
     def halo_cost(self) -> np.ndarray:
+        """(K,) replication cost of a boundary placed after each block: the
+        min(rank, w−1) predecessors RepSN would copy across it."""
         return np.minimum(self.cum_entities, self.window - 1)
 
     @property
     def n_blocks(self) -> int:
+        """Number of unique-key blocks (K)."""
         return int(self.uniq.shape[0])
 
     @property
     def total_comparisons(self) -> int:
+        """Total SN window comparisons over the whole profiled key set."""
         return int(self.cum_comparisons[-1]) if self.n_blocks else 0
 
     def comparisons_in_rank_range(self, lo, hi) -> np.ndarray:
@@ -84,6 +88,49 @@ class KeyProfile:
         r = np.clip(np.asarray(rank, np.int64), 0, max(self.n - 1, 0))
         idx = np.searchsorted(self.cum_entities, r, side="right")
         return self.uniq[np.minimum(idx, self.n_blocks - 1)]
+
+    def merge(self, other: "KeyProfile") -> "KeyProfile":
+        """Combine two profiles into the profile of the CONCATENATED key
+        sets — the incremental accumulator of the streaming analysis job
+        (``repro.stream`` profiles each ingested chunk on device and folds
+        the results, so planning sees the full corpus without ever holding
+        it).
+
+        Exact, not approximate: per-key counts are additive, and every
+        derived column (cum_entities, comparison counts) is a closed-form
+        function of the merged counts via ``window.rank_prefix_comparisons``
+        — ``a.merge(b)`` equals ``profile_keys(concat(a_keys, b_keys))``
+        bit-for-bit.  Windows must match; merging with an empty profile is
+        the identity."""
+        if self.window != other.window:
+            raise ValueError(
+                f"cannot merge profiles with different windows "
+                f"({self.window} vs {other.window})")
+        if other.n == 0:
+            return self
+        if self.n == 0:
+            return other
+        allk = np.concatenate([self.uniq, other.uniq])
+        allc = np.concatenate([self.counts, other.counts])
+        uniq, inv = np.unique(allk, return_inverse=True)
+        counts = np.zeros(uniq.shape[0], np.int64)
+        np.add.at(counts, inv, allc)
+        cum_entities = np.cumsum(counts)
+        cum_comparisons = np.asarray(
+            W.rank_prefix_comparisons(cum_entities, self.window), np.int64)
+        block_comparisons = np.diff(np.concatenate([[0], cum_comparisons]))
+        return KeyProfile(n=self.n + other.n, window=self.window,
+                          uniq=uniq, counts=counts,
+                          cum_entities=cum_entities,
+                          block_comparisons=block_comparisons,
+                          cum_comparisons=cum_comparisons)
+
+    @classmethod
+    def empty(cls, window: int) -> "KeyProfile":
+        """The merge identity: a profile of zero keys under ``window``."""
+        z = np.zeros((0,), np.int64)
+        return cls(n=0, window=window, uniq=z, counts=z, cum_entities=z,
+                   block_comparisons=z, cum_comparisons=z)
 
 
 def profile_keys(keys, *, window: int, valid=None) -> KeyProfile:

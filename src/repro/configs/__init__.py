@@ -1,4 +1,8 @@
-"""Config registry: ``get_config(name)`` and per-arch modules."""
+"""QUARANTINED (ISSUE 5): LM-training scaffolding retained from the seed repo;
+NOT part of the Sorted Neighborhood reproduction — see docs/paper-map.md for
+what the reproduction actually uses.
+
+Config registry: ``get_config(name)`` and per-arch modules."""
 from repro.configs.base import (ModelConfig, MoEConfig, RunConfig,
                                 ShapeConfig, SHAPES, smoke_variant)
 from repro.configs.archs import ARCHS, LONG_CONTEXT_OK

@@ -1,4 +1,8 @@
-"""The 10 assigned architectures (exact configs from the assignment table).
+"""QUARANTINED (ISSUE 5): LM-training scaffolding retained from the seed repo;
+NOT part of the Sorted Neighborhood reproduction — see docs/paper-map.md for
+what the reproduction actually uses.
+
+The 10 assigned architectures (exact configs from the assignment table).
 
 Each is exposed as a module-level ``ModelConfig`` and via the registry in
 ``repro.configs``.  Sources: see DESIGN.md §4 and the assignment brackets.

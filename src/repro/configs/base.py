@@ -1,4 +1,8 @@
-"""Config system for the repro framework.
+"""QUARANTINED (ISSUE 5): LM-training scaffolding retained from the seed repo;
+NOT part of the Sorted Neighborhood reproduction — see docs/paper-map.md for
+what the reproduction actually uses.
+
+Config system for the repro framework.
 
 Every architecture is described by a ``ModelConfig`` (dataclass, hashable) and
 every run (arch x input-shape x mesh) by a ``RunConfig``.  Configs are plain

@@ -1,4 +1,8 @@
-"""Arch config module (assignment deliverable f): selectable via --arch."""
+"""QUARANTINED (ISSUE 5): LM-training scaffolding retained from the seed repo;
+NOT part of the Sorted Neighborhood reproduction — see docs/paper-map.md for
+what the reproduction actually uses.
+
+Arch config module (assignment deliverable f): selectable via --arch."""
 from repro.configs.archs import MUSICGEN_MEDIUM as CONFIG
 from repro.configs.base import smoke_variant
 

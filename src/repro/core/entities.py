@@ -108,6 +108,77 @@ def roll(ents, shift) -> dict:
     }
 
 
+# -- host-side chunk helpers (repro.stream: out-of-core resolution) -----------------
+#
+# The streaming subsystem holds the corpus as HOST numpy chunks (the paper's
+# premise: n is bounded by host disk, not device memory) and only moves one
+# [seam halo | chunk] window to device per resolve.  These helpers are the
+# numpy mirror of the jnp ops above, operating on the same schema.
+
+def to_host(ents) -> dict:
+    """Entity dict with every array materialized as host numpy (same
+    schema; a no-op view for arrays already on host)."""
+    return {
+        "key": np.asarray(ents["key"]),
+        "eid": np.asarray(ents["eid"]),
+        "valid": np.asarray(ents["valid"]),
+        "payload": {k: np.asarray(v) for k, v in ents["payload"].items()},
+    }
+
+
+def host_take(ents: dict, idx) -> dict:
+    """Row subset of a host entity dict (``idx``: slice, bool mask, or
+    integer index array)."""
+    return {
+        "key": ents["key"][idx],
+        "eid": ents["eid"][idx],
+        "valid": ents["valid"][idx],
+        "payload": {k: v[idx] for k, v in ents["payload"].items()},
+    }
+
+
+def host_concat(chunks) -> dict:
+    """Concatenate host entity dicts row-wise (all must share the payload
+    schema; an empty list is rejected — there is no schema to produce)."""
+    chunks = list(chunks)
+    if not chunks:
+        raise ValueError("host_concat needs at least one chunk")
+    if len(chunks) == 1:
+        return chunks[0]
+    cat = lambda f: np.concatenate([c[f] for c in chunks], axis=0)
+    return {
+        "key": cat("key"), "eid": cat("eid"), "valid": cat("valid"),
+        "payload": {k: np.concatenate([c["payload"][k] for c in chunks],
+                                      axis=0)
+                    for k in chunks[0]["payload"]},
+    }
+
+
+def sort_chunk(ents, key=None) -> dict:
+    """Device-sort one chunk by (key, eid) and return it as a host dict
+    with invalid slots DROPPED — the per-chunk device sort of the external
+    merge (``repro.stream``): the O(n log n) work runs as JAX ops, the
+    sorted run lands back on host for spooling/merging.
+
+    ``key`` optionally overrides ``ents["key"]`` (a multi-pass derived sort
+    key); eids and payload ride unchanged."""
+    e = ents if key is None else {
+        "key": jnp.asarray(key, jnp.int32), "eid": ents["eid"],
+        "valid": ents["valid"], "payload": ents["payload"]}
+    h = to_host(sort_entities(e))
+    return host_take(h, slice(0, int(h["valid"].sum())))
+
+
+def composite_order_key(ents: dict) -> np.ndarray:
+    """(N,) int64 merge key ``(key << 32) | eid`` — one scalar per entity
+    that orders exactly like the (key, eid) lexsort (keys < 2^30 and eids
+    non-negative int32 by schema), so sorted runs merge on a single int64
+    comparison."""
+    key = np.asarray(ents["key"], np.int64)
+    eid = np.asarray(ents["eid"], np.int64)
+    return (key << 32) | eid
+
+
 # -- synthetic data (benchmarks / tests) ------------------------------------------
 
 def synth_entities(rng: np.random.Generator, n: int, *,

@@ -39,4 +39,40 @@ def multipass_keys(text: jax.Array, passes: int = 2, k: int = 2):
 
 
 def key_range(k: int = 2) -> int:
+    """Size of the key space a ``k``-character ``prefix_key`` can produce."""
     return 64 ** k
+
+
+KEY_MASK = (1 << 30) - 1    # entities.py schema: keys non-negative, < 2^30
+
+
+def derive_sort_key(ents: dict, spec) -> jax.Array:
+    """Derive the sort key one multi-pass blocking pass uses.
+
+    ``spec`` is an ``api.config.SortKeySpec``; see its docstring for the
+    kinds.  Returns an (N,) int32 array in the entity key space (non-
+    negative, < 2^30).  Raises ``KeyError`` when the named payload field is
+    absent and ``ValueError`` when the field's shape does not match the
+    kind (prefix needs (N, L) bytes, word needs a 2-D integer array)."""
+    if spec.kind == "identity":
+        src = ents["key"] if spec.source == "key" \
+            else ents["payload"][spec.source]
+        if src.ndim != 1:
+            raise ValueError(f"identity sort key needs a 1-D field, got "
+                             f"{spec.source!r} with shape {src.shape}")
+        return (src.astype(jnp.int32) & KEY_MASK).astype(jnp.int32)
+    field = ents["payload"][spec.source]
+    if spec.kind == "prefix":
+        if field.ndim != 2 or field.shape[1] < spec.offset + spec.width:
+            raise ValueError(f"prefix sort key needs an (N, L) byte field "
+                             f"with L >= offset+width="
+                             f"{spec.offset + spec.width}, got "
+                             f"{spec.source!r} with shape {field.shape}")
+        return prefix_key(field[:, spec.offset:], k=spec.width)
+    # spec.kind == "word" (validated at SortKeySpec construction)
+    if field.ndim != 2 or spec.index >= field.shape[1]:
+        raise ValueError(f"word sort key needs column {spec.index} of a 2-D "
+                         f"field, got {spec.source!r} with shape "
+                         f"{field.shape}")
+    return (field[:, spec.index].astype(jnp.int32) & KEY_MASK) \
+        .astype(jnp.int32)

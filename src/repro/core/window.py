@@ -29,6 +29,13 @@ Band evaluation is a pluggable seam — a **BandEngine** selected by
 Engines register with ``@register_band_engine("name")``; both return the
 same part dict (``mask``/``match``/``matcher_evals``/``cand_overflow``), so
 variants and runners never branch on the engine.
+
+The halo/seam convention generalizes beyond shard boundaries: the same
+``[halo | native]`` layout that closes partition seams (RepSN) closes the
+CHUNK seams of out-of-core streaming — ``repro.stream`` prepends the w-1
+preceding global entities to every chunk and the band emits each SN pair
+at its true sorted distance (the pair-ownership rule of the cost model
+below is also why per-chunk pair unions dedup cleanly).
 """
 from __future__ import annotations
 
@@ -220,6 +227,8 @@ def score_candidates(ents: dict, cand_i, cand_d, cand_valid,
 
 
 def band_pair_count(mask: jax.Array) -> jax.Array:
+    """Number of True slots in a boolean band — the device-side pair count
+    (blocked or matched, depending on which band is passed)."""
     return jnp.sum(mask.astype(jnp.int32))
 
 

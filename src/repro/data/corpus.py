@@ -88,6 +88,56 @@ def zipf_entities(seed: int, n: int, *, n_clusters: int = 256,
         payload={"feat": jnp.asarray(feat), "sig": jnp.asarray(sig)})
 
 
+def synth_entity_chunks(seed: int, n: int, chunk: int, *,
+                        n_keys: int = 1000, sig_words: int = 8,
+                        feat_dim: int = 32, dup_frac: float = 0.2,
+                        skew: float = 0.0,
+                        text_len: int = 0) -> Iterator[dict]:
+    """Chunked ``entities.synth_entities``: the out-of-core corpus source
+    for ``repro.stream`` (yields ceil(n / chunk) entity chunks, generated
+    one at a time — nothing larger than ``chunk`` is ever materialized).
+
+    Eids are globally unique (chunk c owns ``[c*chunk, c*chunk+len)``);
+    duplicates are planted WITHIN each chunk (near-identical payloads),
+    while cross-chunk near-neighbors arise from the shared key space —
+    exactly the layout an external sort has to repair."""
+    from repro.core import entities as E
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk}")
+    rng = np.random.default_rng(seed)
+    for start in range(0, n, chunk):
+        size = min(chunk, n - start)
+        ents = E.synth_entities(rng, size, n_keys=n_keys,
+                                sig_words=sig_words, feat_dim=feat_dim,
+                                dup_frac=dup_frac, skew=skew,
+                                text_len=text_len)
+        ents["eid"] = jnp.asarray(
+            np.arange(start, start + size, dtype=np.int32))
+        yield ents
+
+
+def zipf_entity_chunks(seed: int, n: int, chunk: int, *,
+                       n_clusters: int = 256, exponent: float = 1.1,
+                       dup_frac: float = 0.2, cluster_width: int = 1,
+                       key_space: int = 1 << 20, feat_dim: int = 32,
+                       sig_words: int = 8) -> Iterator[dict]:
+    """Chunked ``zipf_entities``: the skewed out-of-core corpus (hot-key
+    clusters in every chunk) that exercises the streaming per-chunk
+    planning hook.  Eids are globally unique, one chunk at a time."""
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk}")
+    for i, start in enumerate(range(0, n, chunk)):
+        size = min(chunk, n - start)
+        ents = zipf_entities(seed + i, size, n_clusters=n_clusters,
+                             exponent=exponent, dup_frac=dup_frac,
+                             cluster_width=cluster_width,
+                             key_space=key_space, feat_dim=feat_dim,
+                             sig_words=sig_words)
+        ents["eid"] = jnp.asarray(
+            np.arange(start, start + size, dtype=np.int32))
+        yield ents
+
+
 def doc_entities(docs: np.ndarray, *, sig_words: int = 8,
                  feat_dim: int = 64) -> dict:
     """Documents -> entity records: blocking key from the leading tokens,

@@ -1,4 +1,8 @@
-"""Attention: RoPE, chunk-pair flash attention, decode attention.
+"""QUARANTINED (ISSUE 5): LM-training scaffolding retained from the seed repo;
+NOT part of the Sorted Neighborhood reproduction — see docs/paper-map.md for
+what the reproduction actually uses.
+
+Attention: RoPE, chunk-pair flash attention, decode attention.
 
 The training/prefill path uses *chunk-pair flash attention*: the (q-chunk,
 kv-chunk) pairs that can contain unmasked entries are enumerated **statically**

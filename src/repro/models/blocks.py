@@ -1,4 +1,8 @@
-"""Block composition: (sequence mixer) + (channel mixer) with pre/post norms.
+"""QUARANTINED (ISSUE 5): LM-training scaffolding retained from the seed repo;
+NOT part of the Sorted Neighborhood reproduction — see docs/paper-map.md for
+what the reproduction actually uses.
+
+Block composition: (sequence mixer) + (channel mixer) with pre/post norms.
 
 A *group* is one period of ``cfg.pattern`` (e.g. gemma2: (local, global);
 recurrentgemma: (rglru, rglru, attn_local)); the LM scans over stacked groups.

@@ -1,4 +1,8 @@
-"""Top-level language model: embedding -> scan over layer groups -> head.
+"""QUARANTINED (ISSUE 5): LM-training scaffolding retained from the seed repo;
+NOT part of the Sorted Neighborhood reproduction — see docs/paper-map.md for
+what the reproduction actually uses.
+
+Top-level language model: embedding -> scan over layer groups -> head.
 
 Supports three execution modes through one ``forward``:
   train/eval:  tokens/embeds (B,S)  -> logits (B,S,V)

@@ -1,4 +1,8 @@
-"""Minimal functional module system.
+"""QUARANTINED (ISSUE 5): LM-training scaffolding retained from the seed repo;
+NOT part of the Sorted Neighborhood reproduction — see docs/paper-map.md for
+what the reproduction actually uses.
+
+Minimal functional module system.
 
 No flax dependency: params are nested dicts of jnp arrays; every module is an
 ``init_*``/``apply_*`` function pair plus a ``specs_*`` function returning the

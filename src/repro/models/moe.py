@@ -1,4 +1,8 @@
-"""Mixture-of-Experts layer.
+"""QUARANTINED (ISSUE 5): LM-training scaffolding retained from the seed repo;
+NOT part of the Sorted Neighborhood reproduction — see docs/paper-map.md for
+what the reproduction actually uses.
+
+Mixture-of-Experts layer.
 
 Design (TPU-native, GSPMD-friendly): the MoE layer runs inside ``shard_map``.
 Tokens are sharded over the (pod, data) axes and *replicated* over the model

@@ -1,4 +1,8 @@
-"""Recurrent sequence-mixing blocks: xLSTM (mLSTM + sLSTM) and RG-LRU (Griffin).
+"""QUARANTINED (ISSUE 5): LM-training scaffolding retained from the seed repo;
+NOT part of the Sorted Neighborhood reproduction — see docs/paper-map.md for
+what the reproduction actually uses.
+
+Recurrent sequence-mixing blocks: xLSTM (mLSTM + sLSTM) and RG-LRU (Griffin).
 
 mLSTM uses a stabilized *chunkwise-parallel* form (scan over chunks, dense
 intra-chunk math on the MXU) for train/prefill and a single-step state update

@@ -59,7 +59,17 @@ class CacheStats:
     evictions: int = 0
 
     def snapshot(self) -> Tuple[int, int, int]:
+        """Current (hits, misses, traces) — pair with ``delta`` to meter
+        one region of work (the counters are process-wide and monotone)."""
         return (self.hits, self.misses, self.traces)
+
+    def delta(self, since: Tuple[int, int, int]) -> Tuple[int, int, int]:
+        """(hits, misses, traces) accrued since a ``snapshot()`` — how
+        ``facade.resolve`` builds per-call ``PerfStats`` and how
+        ``repro.stream`` attributes cache behavior to individual chunks
+        (a steady-state chunk shows hits > 0, misses == traces == 0)."""
+        h, m, t = since
+        return (self.hits - h, self.misses - m, self.traces - t)
 
 
 def tree_fingerprint(tree) -> Tuple:

@@ -1,4 +1,8 @@
-"""Batched serving engine: prefill + decode with jit'd steps.
+"""QUARANTINED (ISSUE 5): LM-training scaffolding retained from the seed repo;
+NOT part of the Sorted Neighborhood reproduction — see docs/paper-map.md for
+what the reproduction actually uses.
+
+Batched serving engine: prefill + decode with jit'd steps.
 
 Serves batched requests (fixed batch, left-aligned prompts) against any arch
 config: prefill fills the KV/recurrent caches and emits the first token;

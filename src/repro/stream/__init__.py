@@ -1,0 +1,38 @@
+"""``repro.stream`` — out-of-core streaming entity resolution.
+
+The streaming twin of ``repro.api``: consume an ITERATOR of entity chunks,
+globally sort-partition them out-of-core (per-chunk device sorts + k-way
+host merge, optionally spooled to disk), and drive the existing variant ×
+runner × engine machinery chunk-by-chunk with a w−1 seam halo — the union
+of emitted pairs is bit-identical to a monolithic ``api.resolve`` while
+peak device residency stays bounded by ``chunk_size``.
+
+    from repro import stream
+    from repro.data.corpus import synth_entity_chunks
+
+    res = stream.resolve_stream(
+        synth_entity_chunks(seed=0, n=100_000, chunk=10_000),
+        api.ERConfig(variant="repsn", hops=7, runner="vmap", num_shards=8),
+        spool_dir="/tmp/er-spool")        # host disk, not device memory
+    res.pairs                  # == monolithic resolve on the full corpus
+    res.stream.steady_chunks   # chunks served from the executable cache
+    res.stream.chunk_device_bytes  # peak device input bytes (vs corpus_bytes)
+
+Pieces:
+
+  * resolver      ``resolve_stream`` / ``link_stream`` + ``StreamResult``
+                  / ``StreamStats`` (the chunked drive loop, seam-halo
+                  carry, SRP global-rank routing, multi-pass orchestration)
+  * external_sort per-chunk device sorts + galloping k-way merge
+  * store         ``ChunkStore``: the in-memory-or-disk chunk spool
+"""
+from repro.stream.external_sort import merged_blocks, rechunk
+from repro.stream.resolver import (StreamResult, StreamStats, link_stream,
+                                   resolve_stream)
+from repro.stream.store import ChunkStore
+
+__all__ = [
+    "resolve_stream", "link_stream",
+    "StreamResult", "StreamStats",
+    "ChunkStore", "merged_blocks", "rechunk",
+]

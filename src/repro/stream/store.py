@@ -1,0 +1,120 @@
+"""Spooled chunk storage — the out-of-core buffer behind ``resolve_stream``.
+
+A ``ChunkStore`` holds a sequence of HOST entity chunks (the numpy schema of
+``core.entities.to_host``) either in memory (default) or spooled to disk as
+``.npz`` files (``spool_dir``) — the stand-in for the paper's HDFS sequence
+files.  Spooled chunks are written once at append time and re-read on
+demand, so the resident set during the external merge is the per-run index
+plus the runs currently being consumed, never the whole corpus.
+
+Two access granularities keep the merge cheap:
+
+  * ``load(i)``        the full chunk (key/eid/valid + payload) — read when
+                       a merge block actually gathers the chunk's rows
+  * ``load_index(i)``  only ``key``/``eid`` — the 8–12 bytes/entity the
+                       k-way merge needs to ORDER the stream (``.npz``
+                       members are decompressed lazily, so payload bytes
+                       stay on disk)
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, Iterator, List, Optional
+
+import numpy as np
+
+_PAYLOAD_PREFIX = "payload__"
+
+
+class ChunkStore:
+    """Append-only sequence of host entity chunks, optionally disk-spooled.
+
+    ``spool_dir=None`` keeps chunks in memory (tests, small corpora);
+    otherwise each appended chunk is written to
+    ``{spool_dir}/{prefix}{i:06d}.npz`` and dropped from memory.  All
+    chunks must share one payload schema (validated on append)."""
+
+    def __init__(self, spool_dir: Optional[str] = None,
+                 prefix: str = "chunk"):
+        self.spool_dir = spool_dir
+        self.prefix = prefix
+        self.spooled_bytes = 0
+        self._mem: List[Optional[dict]] = []
+        self._paths: List[str] = []
+        self._schema: Optional[tuple] = None
+        if spool_dir is not None:
+            os.makedirs(spool_dir, exist_ok=True)
+
+    def __len__(self) -> int:
+        return len(self._mem)
+
+    @property
+    def n_entities(self) -> int:
+        """Total rows across all stored chunks."""
+        return sum(self.load_index(i)["key"].shape[0]
+                   for i in range(len(self)))
+
+    def _check_schema(self, ents: dict) -> None:
+        schema = tuple(sorted(ents["payload"]))
+        if self._schema is None:
+            self._schema = schema
+        elif schema != self._schema:
+            raise ValueError(f"chunk payload schema {schema} does not match "
+                             f"the store's {self._schema}")
+
+    def append(self, ents: dict) -> None:
+        """Store one host entity chunk (spooling it to disk when the store
+        was built with a ``spool_dir``)."""
+        self._check_schema(ents)
+        if self.spool_dir is None:
+            self._mem.append(ents)
+            self._paths.append("")
+            return
+        i = len(self._mem)
+        path = os.path.join(self.spool_dir, f"{self.prefix}{i:06d}.npz")
+        np.savez(path, key=ents["key"], eid=ents["eid"],
+                 valid=ents["valid"],
+                 **{_PAYLOAD_PREFIX + k: v
+                    for k, v in ents["payload"].items()})
+        self.spooled_bytes += os.path.getsize(path)
+        self._mem.append(None)
+        self._paths.append(path)
+
+    def load(self, i: int) -> dict:
+        """Read chunk ``i`` back as a host entity dict."""
+        if self._mem[i] is not None:
+            return self._mem[i]
+        with np.load(self._paths[i], allow_pickle=False) as z:
+            return {
+                "key": z["key"], "eid": z["eid"], "valid": z["valid"],
+                "payload": {k[len(_PAYLOAD_PREFIX):]: z[k]
+                            for k in z.files
+                            if k.startswith(_PAYLOAD_PREFIX)},
+            }
+
+    def load_index(self, i: int) -> Dict[str, np.ndarray]:
+        """Read only chunk ``i``'s ``key``/``eid`` columns (the merge
+        index; payload members stay unread on disk)."""
+        if self._mem[i] is not None:
+            return {"key": self._mem[i]["key"], "eid": self._mem[i]["eid"]}
+        with np.load(self._paths[i], allow_pickle=False) as z:
+            return {"key": z["key"], "eid": z["eid"]}
+
+    def load_field(self, i: int, name: str) -> np.ndarray:
+        """Read one payload column of chunk ``i`` (``.npz`` members load
+        lazily, so other payload arrays stay on disk — the metrics path
+        counts ``src`` tags this way without re-reading the corpus)."""
+        if self._mem[i] is not None:
+            return self._mem[i]["payload"][name]
+        with np.load(self._paths[i], allow_pickle=False) as z:
+            return z[_PAYLOAD_PREFIX + name]
+
+    def payload_fields(self) -> tuple:
+        """Sorted payload field names of the stored schema (empty before
+        the first append)."""
+        return self._schema or ()
+
+    def __iter__(self) -> Iterator[dict]:
+        """Yield every chunk in append order (each loaded on demand)."""
+        for i in range(len(self)):
+            yield self.load(i)

@@ -1,4 +1,8 @@
-"""Checkpointing: atomic, resumable, mesh-elastic.
+"""QUARANTINED (ISSUE 5): LM-training scaffolding retained from the seed repo;
+NOT part of the Sorted Neighborhood reproduction — see docs/paper-map.md for
+what the reproduction actually uses.
+
+Checkpointing: atomic, resumable, mesh-elastic.
 
   * save: gather to host, write <dir>/step_N.npz.tmp, fsync, atomic rename,
     then update manifest.json — a crash mid-write never corrupts the latest

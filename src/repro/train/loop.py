@@ -1,4 +1,8 @@
-"""Fault-tolerant training loop.
+"""QUARANTINED (ISSUE 5): LM-training scaffolding retained from the seed repo;
+NOT part of the Sorted Neighborhood reproduction — see docs/paper-map.md for
+what the reproduction actually uses.
+
+Fault-tolerant training loop.
 
 Production behaviours (1000+ node posture, scaled to this harness):
   * checkpoint every N steps (atomic, async-capable) + resume-from-latest

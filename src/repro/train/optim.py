@@ -1,4 +1,8 @@
-"""AdamW with FSDP/ZeRO-sharded states, global-norm clipping, wd, schedules.
+"""QUARANTINED (ISSUE 5): LM-training scaffolding retained from the seed repo;
+NOT part of the Sorted Neighborhood reproduction — see docs/paper-map.md for
+what the reproduction actually uses.
+
+AdamW with FSDP/ZeRO-sharded states, global-norm clipping, wd, schedules.
 
 Optimizer moments inherit the parameter sharding (params are already sharded
 over data x model when FSDP is on, so the optimizer state is fully sharded —

@@ -1,4 +1,8 @@
-"""Step functions: train_step / prefill_step / decode_step factories.
+"""QUARANTINED (ISSUE 5): LM-training scaffolding retained from the seed repo;
+NOT part of the Sorted Neighborhood reproduction — see docs/paper-map.md for
+what the reproduction actually uses.
+
+Step functions: train_step / prefill_step / decode_step factories.
 
 Each factory returns (fn, in_shardings, out_shardings, example_inputs) so the
 launcher can jit + lower uniformly for real runs and for the dry-run.

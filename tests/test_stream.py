@@ -1,0 +1,357 @@
+"""Seam correctness for out-of-core streaming + multi-pass blocking (ISSUE 5).
+
+  * ``resolve_stream`` over fixed AND random chunkings (including
+    chunk_size < w) is bit-identical to monolithic ``resolve`` — all three
+    variants x {scan, pallas} band engines
+  * SRP streaming reproduces the monolithic plan exactly (key-bounds and
+    rank-granular planners) from the incrementally merged KeyProfile
+  * multi-pass blocking: the union equals the per-pass union oracle, both
+    monolithic and streamed; linkage streams untag correctly
+  * streaming machinery units: external merge ordering, rechunking, the
+    disk spool roundtrip, steady-state chunk accounting
+"""
+import numpy as np
+import pytest
+
+from repro import api, stream
+from repro import balance as B
+from repro.core import entities as E
+from repro.core import keys as K
+from repro.stream.external_sort import merged_blocks, rechunk
+from repro.stream.store import ChunkStore
+
+N, R, W = 700, 4, 6
+VARIANTS = ["srp", "repsn", "jobsn"]
+ENGINES = ["scan", "pallas"]
+
+
+def _cfg(**kw):
+    kw.setdefault("window", W)
+    kw.setdefault("num_shards", R)
+    kw.setdefault("variant", "repsn")
+    kw.setdefault("hops", R - 1)
+    kw.setdefault("runner", "vmap")
+    return api.ERConfig(**kw)
+
+
+@pytest.fixture(scope="module")
+def ents():
+    rng = np.random.default_rng(5)
+    return E.synth_entities(rng, N, n_keys=90, dup_frac=0.25, text_len=8)
+
+
+def _chunks_of(ents, sizes):
+    """Split an entity set into host chunks of the given sizes."""
+    h = E.to_host(ents)
+    out, s = [], 0
+    for sz in sizes:
+        out.append(E.host_take(h, slice(s, s + sz)))
+        s += sz
+    assert s == h["key"].shape[0]
+    return out
+
+
+def _even_chunks(ents, sz):
+    h = E.to_host(ents)
+    n = int(h["key"].shape[0])
+    return [E.host_take(h, slice(s, min(s + sz, n)))
+            for s in range(0, n, sz)]
+
+
+# -- streaming == monolithic, all variants x engines --------------------------------
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_stream_bit_identical_to_monolithic(ents, variant, engine):
+    cfg = _cfg(variant=variant, band_engine=engine)
+    mono = api.resolve(ents, cfg)
+    res = stream.resolve_stream(_even_chunks(ents, 175), cfg,
+                                chunk_size=175)
+    assert res.pairs == mono.pairs
+    assert res.matches == mono.matches
+    # the corpus is 4x the chunk: the stream really ran chunked
+    assert res.stream.chunks == 4
+    assert res.stream.entities == N
+
+
+def test_random_chunkings_property(ents):
+    """Random input chunk sizes AND random device chunk_size (including
+    chunk_size < w) all reproduce the monolithic pair sets."""
+    cfg = _cfg()
+    mono = api.resolve(ents, cfg)
+    for seed in range(4):
+        rng = np.random.default_rng(seed)
+        sizes, left = [], N
+        while left:
+            s = int(rng.integers(1, min(left, 130) + 1))
+            sizes.append(s)
+            left -= s
+        chunk_size = int(rng.integers(2, 140))   # seeds cover < W and >= W
+        res = stream.resolve_stream(_chunks_of(ents, sizes), cfg,
+                                    chunk_size=chunk_size)
+        assert res.pairs == mono.pairs, (seed, sizes, chunk_size)
+        assert res.matches == mono.matches, (seed, sizes, chunk_size)
+
+
+def test_tiny_chunk_size_smaller_than_window(ents):
+    cfg = _cfg(variant="jobsn", band_engine="pallas")
+    mono = api.resolve(ents, cfg)
+    res = stream.resolve_stream(_even_chunks(ents, 100), cfg, chunk_size=4)
+    assert res.pairs == mono.pairs
+    # chunks of 4 < r*w cannot plan r shards: they collapse (and say so)
+    assert res.stream.degenerate_chunks == res.stream.chunks
+
+
+@pytest.mark.parametrize("partitioner",
+                         ["balanced", "uniform", "blocksplit", "pairrange"])
+def test_srp_stream_reproduces_monolithic_plan(ents, partitioner):
+    """SRP's pair set DEPENDS on the partitioning: streaming must rebuild
+    the exact monolithic plan from the merged profile and route chunks by
+    global rank (rank-granular planners included)."""
+    cfg = _cfg(variant="srp", partitioner=partitioner)
+    mono = api.resolve(ents, cfg)
+    res = stream.resolve_stream(_even_chunks(ents, 200), cfg,
+                                chunk_size=160)
+    assert res.pairs == mono.pairs
+    assert res.matches == mono.matches
+
+
+def test_srp_stream_metrics_expose_boundary_loss(ents):
+    """The streaming oracle is the FULL sequential-SN set (like the
+    facade's): SRP streams must report the same sub-1.0 completeness the
+    monolithic resolve does, not absolve the missed boundary pairs."""
+    cfg = _cfg(variant="srp", compute_metrics=True)
+    mono = api.resolve(ents, cfg)
+    res = stream.resolve_stream(_even_chunks(ents, 175), cfg,
+                                chunk_size=175)
+    assert mono.metrics.pairs_completeness < 1.0
+    assert res.metrics.pairs_completeness == \
+        pytest.approx(mono.metrics.pairs_completeness, abs=1e-12)
+    assert res.metrics.reduction_ratio == \
+        pytest.approx(mono.metrics.reduction_ratio, abs=1e-12)
+
+
+def test_sequential_runner_stream(ents):
+    cfg = _cfg(variant="srp", runner="sequential")
+    mono = api.resolve(ents, cfg)
+    res = stream.resolve_stream(_even_chunks(ents, 180), cfg,
+                                chunk_size=180)
+    assert res.pairs == mono.pairs
+    assert res.matches == mono.matches
+
+
+# -- multi-pass blocking ------------------------------------------------------------
+
+def _passes():
+    return (api.SortKeySpec(name="key"),
+            api.SortKeySpec(name="text1", source="text", kind="prefix",
+                            offset=1, width=2))
+
+
+def test_multipass_union_equals_per_pass_oracle(ents):
+    """resolve() under cfg.passes returns the union of the single-pass
+    runs, and that union scores pairs_completeness == 1 against the union
+    of the per-pass sequential oracles."""
+    cfg = _cfg(compute_metrics=True, passes=_passes())
+    res = api.resolve(ents, cfg)
+    assert isinstance(res, api.MultiPassResult)
+    singles = [api.resolve(
+        {"key": K.derive_sort_key(ents, spec), "eid": ents["eid"],
+         "valid": ents["valid"], "payload": ents["payload"]},
+        cfg.with_(passes=())) for spec in cfg.passes]
+    assert res.pairs == frozenset().union(*(s.pairs for s in singles))
+    assert res.matches == frozenset().union(*(s.matches for s in singles))
+    assert res.metrics.pairs_completeness == 1.0
+    # the second key really adds recall (otherwise the test is vacuous)
+    assert len(res.pairs) > len(res.passes[0].pairs)
+    assert res.pass_result("key").pairs == res.passes[0].pairs
+
+
+def test_multipass_stream_equals_monolithic(ents):
+    cfg = _cfg(passes=_passes())
+    mono = api.resolve(ents, cfg)
+    res = stream.resolve_stream(_even_chunks(ents, 175), cfg,
+                                chunk_size=175)
+    assert res.pairs == mono.pairs
+    assert res.matches == mono.matches
+    assert res.pass_names == mono.pass_names
+    for sp, mp in zip(res.passes, mono.passes):
+        assert sp.pairs == mp.pairs
+
+
+def test_multipass_rejects_explicit_bounds(ents):
+    cfg = _cfg(passes=_passes())
+    with pytest.raises(ValueError, match="bounds"):
+        api.resolve(ents, cfg, bounds=np.asarray([10, 20, 30], np.int32))
+
+
+def test_sort_key_spec_validation():
+    with pytest.raises(ValueError, match="kind"):
+        api.SortKeySpec(kind="hash")
+    with pytest.raises(ValueError, match="width"):
+        api.SortKeySpec(kind="prefix", width=9)
+    with pytest.raises(ValueError, match="unique"):
+        api.ERConfig(passes=(api.SortKeySpec(), api.SortKeySpec()))
+
+
+def test_multipass_link(ents):
+    """link() under passes: union + per-pass pairs untagged to source id
+    spaces, cross-source only."""
+    rng = np.random.default_rng(9)
+    lhs = E.synth_entities(rng, 250, n_keys=60, text_len=8)
+    rhs = E.synth_entities(rng, 200, n_keys=60, text_len=8)
+    cfg = _cfg(passes=_passes())
+    res = api.link(lhs, rhs, cfg)
+    assert isinstance(res, api.MultiPassResult)
+    singles = [api.link(lhs, rhs, cfg.with_(passes=(spec,)))
+               for spec in cfg.passes]
+    assert res.pairs == frozenset().union(
+        *(s.pairs for s in singles))
+    n_l, n_r = 250, 200
+    assert all(0 <= a < n_l and 0 <= b < n_r for a, b in res.pairs)
+
+
+def test_link_stream_matches_link():
+    rng = np.random.default_rng(12)
+    lhs = E.synth_entities(rng, 260, n_keys=50)
+    rhs = E.synth_entities(rng, 220, n_keys=50)
+    cfg = _cfg()
+    mono = api.link(lhs, rhs, cfg)
+    res = stream.link_stream(_even_chunks(lhs, 100), _even_chunks(rhs, 90),
+                             cfg, chunk_size=150)
+    assert res.pairs == mono.pairs
+    assert res.matches == mono.matches
+
+
+# -- streaming machinery units ------------------------------------------------------
+
+def test_merged_blocks_global_order(ents):
+    """The k-way merge emits the exact global (key, eid) sort."""
+    runs = ChunkStore()
+    h = E.to_host(ents)
+    for c in _chunks_of(ents, [200, 300, 150, 50]):
+        dev = E.make_entities(c["key"], c["eid"], payload=c["payload"],
+                              valid=c["valid"])
+        runs.append(E.sort_chunk(dev))
+    merged = E.host_concat(list(merged_blocks(runs, 128)))
+    order = np.lexsort((h["eid"], h["key"]))
+    np.testing.assert_array_equal(merged["key"], h["key"][order])
+    np.testing.assert_array_equal(merged["eid"], h["eid"][order])
+
+
+def test_rechunk_exact_sizes(ents):
+    blocks = _chunks_of(ents, [37, 211, 3, 149, 300])
+    out = list(rechunk(iter(blocks), 128))
+    sizes = [int(c["key"].shape[0]) for c in out]
+    assert sizes == [128] * (N // 128) + ([N % 128] if N % 128 else [])
+    np.testing.assert_array_equal(
+        E.host_concat(out)["eid"], E.to_host(ents)["eid"])
+
+
+def test_chunk_store_spool_roundtrip(tmp_path, ents):
+    mem = ChunkStore()
+    disk = ChunkStore(str(tmp_path))
+    for c in _chunks_of(ents, [300, 400]):
+        mem.append(c)
+        disk.append(c)
+    assert disk.spooled_bytes > 0
+    assert len(list(tmp_path.glob("raw*.npz"))) == 0   # prefix is "chunk"
+    assert len(list(tmp_path.glob("chunk*.npz"))) == 2
+    for i in range(2):
+        a, b = mem.load(i), disk.load(i)
+        np.testing.assert_array_equal(a["key"], b["key"])
+        np.testing.assert_array_equal(a["eid"], b["eid"])
+        for k in a["payload"]:
+            np.testing.assert_array_equal(a["payload"][k], b["payload"][k])
+        idx = disk.load_index(i)
+        np.testing.assert_array_equal(idx["key"], a["key"])
+    assert mem.n_entities == disk.n_entities == 700
+
+
+def test_spooled_stream_matches_memory(tmp_path, ents):
+    cfg = _cfg()
+    res_mem = stream.resolve_stream(_even_chunks(ents, 175), cfg,
+                                    chunk_size=175)
+    res_disk = stream.resolve_stream(_even_chunks(ents, 175), cfg,
+                                     chunk_size=175,
+                                     spool_dir=str(tmp_path))
+    assert res_disk.pairs == res_mem.pairs
+    assert res_disk.stream.spooled_bytes > 0
+    assert res_mem.stream.spooled_bytes == 0
+
+
+def test_steady_state_and_residency_accounting(ents):
+    """After the first chunk every chunk hits the executable cache, and the
+    per-chunk device footprint is a fraction of the corpus footprint."""
+    from repro.perf.cache import executable_cache
+    executable_cache().clear()
+    cfg = _cfg()
+    res = stream.resolve_stream(_even_chunks(ents, 175), cfg,
+                                chunk_size=175)
+    assert res.stream.chunks == 4
+    assert res.stream.steady_chunks == 3       # all but the first
+    assert res.stream.cache_misses <= 2        # shard program + collectors
+    # a second identical stream is steady from chunk 0
+    res2 = stream.resolve_stream(_even_chunks(ents, 175), cfg,
+                                 chunk_size=175)
+    assert res2.stream.steady_chunks == res2.stream.chunks
+    assert res2.stream.traces == 0
+    # peak device input is bounded by the chunk, not the corpus
+    assert res.stream.chunk_device_bytes < res.stream.corpus_bytes / 2
+    assert res.stream.carry_entities == (W - 1) * 3
+
+
+def test_stream_rejects_what_monolithic_rejects():
+    """A halo-truncating config fails the stream with the monolithic
+    facade's actionable error (validated once against the GLOBAL plan) —
+    never as a silent cascade of collapsed chunks."""
+    small = E.make_entities(np.arange(12, dtype=np.int32) % 4 * 3,
+                            np.arange(12, dtype=np.int32),
+                            payload={"feat": np.ones((12, 4), np.float32)})
+    cfg = api.ERConfig(window=8, variant="repsn", hops=1, runner="vmap",
+                       num_shards=4, partitioner="uniform")
+    with pytest.raises(ValueError, match="hops"):
+        api.resolve(small, cfg)
+    with pytest.raises(ValueError, match="hops"):
+        stream.resolve_stream([E.to_host(small)], cfg, chunk_size=6)
+
+
+def test_multipass_spool_counts_raw_once(tmp_path, ents):
+    """Per-pass stats spool only their own sorted runs; the shared raw
+    store is stamped once at the top level."""
+    cfg = _cfg(passes=_passes())
+    res = stream.resolve_stream(_even_chunks(ents, 350), cfg,
+                                chunk_size=350, spool_dir=str(tmp_path))
+    raw_bytes = sum(f.stat().st_size for f in tmp_path.glob("raw*.npz"))
+    assert raw_bytes > 0
+    assert res.stream.spooled_bytes == raw_bytes + sum(
+        p.stream.spooled_bytes for p in res.passes)
+
+
+def test_profile_merge_is_exact(ents):
+    keys = np.asarray(ents["key"])
+    parts = np.array_split(keys, 5)
+    merged = B.KeyProfile.empty(W)
+    for p in parts:
+        merged = merged.merge(B.profile_keys(p, window=W))
+    full = B.profile_keys(keys, window=W)
+    np.testing.assert_array_equal(merged.uniq, full.uniq)
+    np.testing.assert_array_equal(merged.counts, full.counts)
+    np.testing.assert_array_equal(merged.cum_comparisons,
+                                  full.cum_comparisons)
+    assert merged.n == full.n
+    with pytest.raises(ValueError, match="window"):
+        merged.merge(B.profile_keys(keys, window=W + 1))
+
+
+def test_plan_from_profile_matches_plan_shards(ents):
+    for part in ["balanced", "uniform", "blocksplit", "pairrange"]:
+        cfg = _cfg(partitioner=part)
+        full = B.plan_shards(ents, cfg, R)
+        prof = B.plan_from_profile(
+            B.profile_keys(np.asarray(ents["key"]), window=W), part, R)
+        np.testing.assert_array_equal(np.asarray(full.bounds),
+                                      np.asarray(prof.bounds))
+        np.testing.assert_array_equal(np.asarray(full.rank_bounds),
+                                      np.asarray(prof.rank_bounds))
+        assert prof.rank_granular == (full.dest is not None)

@@ -1,0 +1,85 @@
+"""Docs build/lint gate: link check + EXECUTE every ```python doc block.
+
+Usage:  PYTHONPATH=src python tools/check_docs.py [file.md ...]
+
+Defaults to README.md, DESIGN.md and docs/*.md.  Two checks:
+
+  1. every relative markdown link resolves to a file in the repo
+     (external http(s)/mailto links and pure #anchors are skipped);
+  2. every fenced ```python block is executed, top to bottom, in ONE
+     namespace per file — quickstarts in the docs are real programs run
+     against the current API, not decorative snippets.  Blocks that are
+     intentionally illustrative must use a different info string
+     (```text, ```bash, ...).
+
+Exit status is non-zero on any broken link or failing block, with the
+file/block identified — the CI docs job runs exactly this.
+"""
+from __future__ import annotations
+
+import re
+import sys
+import traceback
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+BLOCK_RE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+
+
+def default_doc_files() -> list:
+    """The repo's checked markdown set — ONE list shared with the pytest
+    gate (tests/test_docs.py imports this module), so CI's docs job and
+    the test suite can never disagree about what is covered."""
+    return [REPO / "README.md", REPO / "DESIGN.md", REPO / "ROADMAP.md",
+            *sorted((REPO / "docs").glob("*.md"))]
+
+
+def check_links(path: Path) -> list:
+    """Broken relative link targets in one markdown file."""
+    broken = []
+    for target in LINK_RE.findall(path.read_text()):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#")[0]
+        if rel and not (path.parent / rel).exists():
+            broken.append(target)
+    return broken
+
+
+def run_blocks(path: Path) -> list:
+    """Execute every ```python block of one file in a shared namespace;
+    returns [(block_index, traceback_str)] for failures."""
+    failures = []
+    ns: dict = {"__name__": f"docblock:{path.name}"}
+    for i, code in enumerate(BLOCK_RE.findall(path.read_text())):
+        try:
+            exec(compile(code, f"{path.name}[block {i}]", "exec"), ns)
+        except Exception:
+            failures.append((i, traceback.format_exc()))
+    return failures
+
+
+def main(argv) -> int:
+    """Check the given markdown files (or the repo defaults); returns the
+    process exit code (0 = all links resolve and all blocks ran)."""
+    files = [Path(a) for a in argv[1:]] or default_doc_files()
+    rc = 0
+    for f in files:
+        broken = check_links(f)
+        for t in broken:
+            print(f"BROKEN LINK {f}: {t}")
+            rc = 1
+        fails = run_blocks(f)
+        for i, tb in fails:
+            print(f"DOC BLOCK FAILED {f} [block {i}]:\n{tb}")
+            rc = 1
+        n_blocks = len(BLOCK_RE.findall(f.read_text()))
+        print(f"{f}: {n_blocks} python block(s) ran, "
+              f"{len(broken)} broken link(s)")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
