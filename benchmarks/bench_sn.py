@@ -31,6 +31,12 @@ stays as an alias of ``steady_seconds`` for downstream readers.
                            4x the chunk size (steady-state pairs/s, peak
                            device bytes, pair-set parity for all variants x
                            engines) — the BENCH_stream.json baseline
+  * serve_body           — online incremental serving (ISSUE 6): sustained
+                           micro-batch inserts (+ interleaved deletes) into
+                           a ResolutionService over an n-entity base corpus
+                           (inserts/s, p50/p95 latency, zero-retrace steady
+                           state, final parity vs from-scratch resolve) —
+                           the BENCH_serve.json baseline
 """
 from __future__ import annotations
 
@@ -178,17 +184,18 @@ def band_engine_body(n: int = 20_000, w: int = 10, n_keys: int = 2048,
     (median of >= 5 warm, blocked calls) wall time of the full resolve —
     device run + host collection; expensive-matcher evaluations ACTUALLY
     run (the §5.1 FLOP lever — scan pays one full cascade per band slot;
-    pallas scores its cand_cap buffer, sized by the DESIGN.md §6 rule:
-    probe survivor counts with an unbounded buffer, then cap at ~1.25x the
-    busiest shard so overflow is zero and parity holds); pair-emission
-    capacity/overflow (pair_cap = (w-1) * max shard load: a hard upper
-    bound, zero overflow); and transfer bytes of the band-mask vs
+    pallas scores its cand_cap buffer).  Capacities come from
+    ``balance.suggest_caps`` fed with one unbounded probe resolve: the
+    probe's realized loads bound ``pair_cap`` hard (zero overflow) and its
+    gate-survivor counts tighten ``cand_cap`` to the DESIGN.md §6 ~1.25x
+    rule.  Also reported: transfer bytes of the band-mask vs
     packed-index representations.  ``pairs_per_s`` is STEADY-STATE blocked
     pairs per second — the acceptance metric the perf-smoke CI gate
     tracks.  Also times host pair collection: packed uint64 (+np.unique)
     vs the set-of-tuples baseline at ~``collect_pairs`` pairs."""
     import jax
     from repro import api
+    from repro import balance as B
     from repro.core import partition as P
 
     ents = _setup(n, n_keys, text_len=16)
@@ -209,18 +216,17 @@ def band_engine_body(n: int = 20_000, w: int = 10, n_keys: int = 2048,
         cfg = api.ERConfig(window=w, variant=variant, hops=r - 1,
                            runner="vmap", num_shards=r, band_engine=engine,
                            matcher=matcher, emit="pairs")
-        cand_cap = 0
-        if engine == "pallas":
-            # the DESIGN.md §6 sizing probe, via the public result surface:
-            # per-shard gate survivors with an unbounded buffer
-            probe = runner.resolve(ents, bounds, cfg.with_(cand_cap=0))
-            cand_cap = int(max(probe.cand_count) * 1.25) + 16
-            cfg = cfg.with_(cand_cap=cand_cap)
+        # one unbounded probe resolve feeds balance.suggest_caps: realized
+        # loads set the hard pair_cap bound, gate-survivor counts tighten
+        # cand_cap (pallas only — scan has no survivor buffer)
         probe = runner.resolve(ents, bounds, cfg)
-        # emitted-buffer capacity: (w-1) pairs per owned slot is a hard
-        # upper bound, so the busiest shard can never overflow it
-        pair_cap = (w - 1) * max(probe.load) + 16
-        cfg = cfg.with_(pair_cap=pair_cap)
+        prof = B.profile_keys(np.asarray(ents["key"]), window=w)
+        caps = B.suggest_caps(
+            prof, cfg, max_load=int(max(probe.load)),
+            observed_cand=probe.cand_count if engine == "pallas" else None)
+        cand_cap = caps.cand_cap if engine == "pallas" else 0
+        pair_cap = caps.pair_cap
+        cfg = cfg.with_(cand_cap=cand_cap, pair_cap=pair_cap)
 
         cold, steady, res = _cold_steady(
             lambda: runner.resolve(ents, bounds, cfg), steady_reps=reps)
@@ -445,6 +451,97 @@ def stream_body(n: int = 24_000, chunk: int = 6_000, w: int = 10,
     out["parity_all"] = all(v["blocked_equal"] and v["matched_equal"]
                             for v in out["parity"].values())
     return out
+
+
+def serve_body(n: int = 50_000, w: int = 10, n_keys: int = 4096,
+               r: int = 4, batch: int = 200, ops: int = 24,
+               warm: int = 4) -> dict:
+    """Online incremental serving (ISSUE 6 acceptance).
+
+    Bootstraps a ``ResolutionService`` with an ``n``-entity base corpus,
+    then applies ``ops`` micro-batches of ``batch`` inserts with a delete
+    of ``batch // 4`` random live entities interleaved every 4th op.  The
+    first ``warm`` ops populate the shape-bucket grid; the measured tail
+    must be ZERO-RETRACE — every delta call a pure executable-cache hit
+    (``steady_after_warm``, the structural claim perf_smoke gates on).
+    The service is pinned to a single delta-call bucket
+    (``shard_buckets=(8,)``, ``cap_floor=256``) so the steady state is
+    deterministic regardless of where the random inserts land; the
+    multi-bucket grid is exercised in ``tests/test_serve.py``.
+
+    Reports sustained insert throughput (entities/s over the measured
+    insert ops), p50/p95 submit-to-result latency, cache/trace counters,
+    the shape-bucket set, and final bit-parity of the served pair/match
+    sets against one from-scratch ``resolve`` of the live corpus."""
+    import jax
+    from repro import api
+    from repro.core import entities as E
+
+    extra = ops * batch
+    rng = np.random.default_rng(0)
+    full = E.to_host(E.synth_entities(rng, n + extra, n_keys=n_keys,
+                                      dup_frac=0.2))
+    cfg = api.ERConfig(window=w, variant="repsn", hops=r - 1,
+                       runner="vmap", num_shards=r)
+    from repro.perf.cache import executable_cache
+    executable_cache().clear()
+    t0 = time.perf_counter()
+    svc = api.serve(cfg, initial=E.host_take(full, slice(0, n)),
+                    start=False, shard_buckets=(8,), cap_floor=256)
+    bootstrap = time.perf_counter() - t0
+
+    live = np.zeros(n + extra, bool)
+    live[:n] = True
+    del_rng = np.random.default_rng(1)
+    insert_s = insert_n = 0.0
+    traces_after_warm = 0
+    for op in range(ops):
+        lo = n + op * batch
+        if op == warm:
+            traces_after_warm = svc.stats().traces
+        t0 = time.perf_counter()
+        svc.resolve_incremental(E.host_take(full, slice(lo, lo + batch)))
+        dt = time.perf_counter() - t0
+        live[lo:lo + batch] = True
+        if op >= warm:
+            insert_s += dt
+            insert_n += batch
+        if op % 4 == 3:
+            gone = del_rng.choice(np.flatnonzero(live), batch // 4,
+                                  replace=False)
+            svc.delete(full["eid"][gone])
+            live[gone] = False
+
+    st = svc.stats()
+    h = E.host_take(full, np.flatnonzero(live))
+    ref = api.resolve(E.make_entities(h["key"], h["eid"],
+                                      payload=h["payload"],
+                                      valid=h["valid"]), cfg)
+    return {
+        "n": n, "w": w, "r": r, "batch": batch, "ops": ops, "warm": warm,
+        "backend": jax.default_backend(),
+        "bootstrap_seconds": bootstrap,
+        "seconds": insert_s / max(insert_n / batch, 1),
+        "sustained_inserts_per_s": insert_n / max(insert_s, 1e-9),
+        "p50_ms": st.p50_ms,
+        "p95_ms": st.p95_ms,
+        "batches": st.batches,
+        "steady_batches": st.steady_batches,
+        "traces": st.traces,
+        "traces_after_warm": traces_after_warm,
+        "steady_after_warm": st.traces == traces_after_warm,
+        "cache_hits": st.cache_hits,
+        "device_calls": st.device_calls,
+        "shapes": [list(s) for s in st.shapes],
+        "live_entities": st.live_entities,
+        "compactions": st.compactions,
+        "pairs": st.pairs,
+        "matches": st.matches,
+        "parity": {
+            "blocked_equal": svc.pairs == ref.blocking.pairs,
+            "matched_equal": svc.matches == ref.matches,
+        },
+    }
 
 
 def jobsn_vs_repsn_body(n: int = 60_000, w: int = 50, n_keys: int = 4096,

@@ -118,18 +118,56 @@ def check(baseline: dict, current: dict, tolerance: float) -> list:
     return failures
 
 
+def check_serve(blob: dict) -> list:
+    """Machine-independent structural gates over a BENCH_serve.json: every
+    measured micro-batch must be served from the executable cache (zero
+    retraces after warm-up — losing shape bucketing shows up here on any
+    machine class), the shape-bucket set must stay small, and the served
+    sets must keep bit-parity with a from-scratch resolve."""
+    failures = []
+    if not blob.get("steady_after_warm", False):
+        failures.append(
+            f"serve steady state retraced after warm-up "
+            f"(traces {blob.get('traces_after_warm')} -> "
+            f"{blob.get('traces')}) — shape bucketing no longer keeps the "
+            f"delta calls on the executable cache")
+    shapes = blob.get("shapes", [])
+    if len(shapes) > 16:
+        failures.append(f"serve used {len(shapes)} delta-call shapes — the "
+                        f"bucket grid is fragmenting the executable cache")
+    for k, v in blob.get("parity", {}).items():
+        if v is not True:
+            failures.append(f"serve run broke parity: {k}={v}")
+    if float(blob.get("p95_ms", 0.0)) <= 0.0:
+        failures.append("serve run reported no latency samples")
+    print(f"perf_smoke serve: steady="
+          f"{blob.get('steady_batches')}/{blob.get('batches')} "
+          f"zero_retrace={blob.get('steady_after_warm')} "
+          f"p95={blob.get('p95_ms', 0.0):.1f}ms "
+          f"inserts_per_s={blob.get('sustained_inserts_per_s', 0.0):.2e} "
+          f"-> {'OK' if not failures else 'FAIL'}")
+    return failures
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("baseline", help="committed BENCH_band_engine.json")
     ap.add_argument("current", help="freshly generated BENCH_band_engine.json")
     ap.add_argument("--tolerance", type=float, default=0.30,
                     help="allowed fractional pairs_per_s drop (default 0.30)")
+    ap.add_argument("--serve", default=None,
+                    help="optional freshly generated BENCH_serve.json — "
+                         "adds the serving structural gates (zero-retrace "
+                         "steady state, parity)")
     args = ap.parse_args()
     with open(args.baseline) as f:
         baseline = json.load(f)
     with open(args.current) as f:
         current = json.load(f)
     failures = check(baseline, current, args.tolerance)
+    if args.serve:
+        with open(args.serve) as f:
+            failures += check_serve(json.load(f))
     if failures:
         for msg in failures:
             print(f"perf_smoke FAIL: {msg}", file=sys.stderr)

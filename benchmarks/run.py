@@ -16,6 +16,10 @@ Tables:
   stream                out-of-core resolve_stream vs monolithic resolve
                         (pairs/s, peak device bytes, parity for all
                         variants x engines); writes BENCH_stream.json
+  serve                 online incremental serving: sustained micro-batch
+                        inserts/deletes into a ResolutionService
+                        (inserts/s, p50/p95 latency, zero-retrace steady
+                        state, parity); writes BENCH_serve.json
   kernels               Pallas band kernels vs jnp oracle (CPU timings)
   dedup_e2e             end-to-end corpus dedup throughput + SN-vs-n^2 factor
   roofline              summary of dry-run roofline terms (needs artifacts)
@@ -154,6 +158,29 @@ def stream(quick: bool):
         json.dump(res, f, indent=2)
 
 
+def serve(quick: bool):
+    """Online incremental serving (ISSUE 6 acceptance): sustained insert
+    throughput + steady p50/p95 latency over an n-entity base corpus, the
+    zero-retrace steady-state claim, and final parity vs a from-scratch
+    resolve.  Writes BENCH_serve.json (gated by perf_smoke --serve)."""
+    from benchmarks.bench_sn import serve_body
+    res = serve_body(n=5_000 if quick else 50_000,
+                     batch=100 if quick else 200,
+                     ops=12 if quick else 24)
+    _row("serve_insert", res["seconds"] * 1e6,
+         f"inserts_per_s={res['sustained_inserts_per_s']:.2e};"
+         f"p50_ms={res['p50_ms']:.1f};p95_ms={res['p95_ms']:.1f};"
+         f"steady={res['steady_batches']}/{res['batches']};"
+         f"zero_retrace={res['steady_after_warm']};"
+         f"shapes={len(res['shapes'])}")
+    _row("serve_parity", 0.0,
+         f"blocked={res['parity']['blocked_equal']};"
+         f"matched={res['parity']['matched_equal']};"
+         f"pairs={res['pairs']};live={res['live_entities']}")
+    with open("BENCH_serve.json", "w") as f:
+        json.dump(res, f, indent=2)
+
+
 def kernels(quick: bool):
     import jax
     import jax.numpy as jnp
@@ -228,6 +255,7 @@ TABLES = {
     "band_engine": band_engine,
     "balance": balance,
     "stream": stream,
+    "serve": serve,
     "kernels": kernels,
     "dedup_e2e": dedup_e2e,
     "roofline": roofline,

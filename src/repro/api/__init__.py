@@ -37,9 +37,15 @@ Pieces (each importable on its own):
                            sorts, and resolves chunk-by-chunk with a w-1
                            seam halo — bit-identical pair sets with device
                            residency bounded by the chunk size
+  * repro.serve            online incremental twin: ``api.serve(cfg)``
+                           starts a ``ResolutionService`` (persistent
+                           sorted index + neighborhood-delta matching
+                           behind a micro-batched queue) whose served pair
+                           sets stay bit-identical to a from-scratch
+                           ``resolve`` of the live corpus under mutation
 """
 from repro.api.config import ERConfig, SortKeySpec
-from repro.api.facade import default_bounds, link, make_runner, resolve
+from repro.api.facade import default_bounds, link, make_runner, resolve, serve
 from repro.api.linkage import sequential_link_pairs, tag_sources
 from repro.api.results import (BalanceMetrics, BlockingResult, ERMetrics,
                                ERResult, MultiPassResult, PerfStats,
@@ -58,9 +64,21 @@ from repro.balance import (KeyProfile, ShardPlan, available_partitioners,
 from repro.core.window import (available_band_engines, get_band_engine,
                                register_band_engine)
 
+_SERVE_TYPES = ("ResolutionService", "IncrementalResult", "ServeStats")
+
+
+def __getattr__(name):
+    # the serve result types resolve lazily (PEP 562): repro.serve imports
+    # repro.api submodules, so an eager import here would be a cycle
+    if name in _SERVE_TYPES:
+        import repro.serve as _serve
+        return getattr(_serve, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
 __all__ = [
     "ERConfig", "SortKeySpec",
-    "resolve", "link", "make_runner", "default_bounds",
+    "resolve", "link", "serve", "make_runner", "default_bounds",
+    "ResolutionService", "IncrementalResult", "ServeStats",
     "BlockingResult", "ERResult", "ERMetrics", "BalanceMetrics", "PerfStats",
     "MultiPassResult",
     "pairs_from_band",

@@ -270,3 +270,15 @@ def link(lhs: dict, rhs: dict, cfg: ERConfig, *, bounds=None, mesh=None,
     return ERResult(blocking=_untag_blocking(res.blocking, offset),
                     matches=frozenset(LK.untag_pairs(res.matches, offset)),
                     metrics=res.metrics, balance=res.balance, perf=res.perf)
+
+
+def serve(cfg: ERConfig, *, initial=None, **kwargs):
+    """Start an online incremental ``repro.serve.ResolutionService`` under
+    ``cfg`` (single-pass, non-linkage configs only): inserts and deletes
+    arrive as micro-batches, and the served pair sets stay bit-identical
+    to a from-scratch ``resolve`` over the live corpus at every point.
+    ``initial`` seeds the corpus through the same insert path; remaining
+    kwargs (``max_batch``, ``max_wait_ms``, ``spool_dir``, ...) are
+    forwarded to the service constructor."""
+    from repro.serve import ResolutionService
+    return ResolutionService(cfg, initial=initial, **kwargs)

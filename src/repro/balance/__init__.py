@@ -22,6 +22,7 @@ shard programs):
     plan.imbalance                  # planned max/mean comparison ratio
     api.resolve(ents, cfg, bounds=plan)
 """
+from repro.balance.capacity import CapSuggestion, suggest_caps
 from repro.balance.planners import (LEGACY_PARTITIONERS, Partitioner,
                                     ShardPlan, as_plan,
                                     available_partitioners, get_partitioner,
@@ -36,5 +37,6 @@ __all__ = [
     "as_plan", "validate_plan",
     "register_partitioner", "get_partitioner", "available_partitioners",
     "imbalance_ratio", "realized_comparisons",
+    "CapSuggestion", "suggest_caps",
     "LEGACY_PARTITIONERS",
 ]

@@ -1,0 +1,77 @@
+"""Capacity auto-sizing: KeyProfile -> band/pair buffer capacities.
+
+The static-shape shard programs carry three capacity knobs whose sizing
+used to be a manual probe loop in ``benchmarks/bench_sn.band_engine_body``
+(resolve once unbounded, read the result counters, multiply by 1.25):
+
+  cand_cap   per-shard survivor buffer of the pallas cascade compaction
+             (overflow loses MATCHES, never blocked pairs)
+  pair_cap   per-shard emitted-index buffer under ``emit="pairs"``
+             (overflow loses BLOCKED pairs — must be a hard bound)
+  cap_link   the SRP shuffle bucket capacity (planned exactly by
+             ``plan_shards``; reported here for completeness)
+
+``suggest_caps`` derives all of them from a ``KeyProfile`` alone: the
+planned per-shard loads of ``plan_from_profile`` bound every band buffer —
+a shard holding L entities (plus its w-1 halo) owns at most (w-1)*(L+w-1)
+band slots, so capacities sized from the planned maximum load can never
+overflow.  ``observed_cand`` optionally tightens ``cand_cap`` from measured
+gate-survivor counts (the DESIGN.md §6 rule: ~1.25x the busiest shard) —
+the FLOP lever the hard bound intentionally leaves on the table.
+
+Used by the serving layer (``repro.serve`` sizes its delta-call buffers so
+steady-state parity is capacity-independent) and by the bench bodies.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence
+
+import numpy as np
+
+from repro.balance.planners import plan_from_profile
+from repro.balance.profile import KeyProfile
+
+# deterministic headroom on top of the exact bounds: keeps caps stable when
+# a profile is re-derived with tiny count jitter (and mirrors the slack the
+# old manual probe loop added)
+_SLACK = 16
+
+
+class CapSuggestion(NamedTuple):
+    """Derived capacities for one (profile, cfg, r) combination.
+
+    ``max_load`` is the planned busiest-shard entity count INCLUDING the
+    w-1 halo — the quantity every band buffer scales with."""
+    cand_cap: int
+    pair_cap: int
+    max_load: int
+
+
+def suggest_caps(profile: KeyProfile, cfg, r: Optional[int] = None, *,
+                 max_load: Optional[int] = None,
+                 observed_cand: Optional[Sequence[int]] = None
+                 ) -> CapSuggestion:
+    """Derive ``cand_cap``/``pair_cap`` from a ``KeyProfile`` (see module
+    doc).  ``r`` defaults to ``cfg.num_shards``; ``max_load`` overrides the
+    planned busiest-shard load (the serving layer passes its padded region
+    capacity directly); ``observed_cand`` — per-shard gate-survivor counts
+    from a probe resolve — tightens ``cand_cap`` to ~1.25x the busiest
+    shard instead of the never-overflows band bound."""
+    w = cfg.window
+    if r is None:
+        r = cfg.num_shards
+    if max_load is None:
+        if profile.n == 0:
+            raise ValueError("cannot size capacities from an empty profile; "
+                             "pass max_load explicitly")
+        plan = plan_from_profile(profile, cfg.partitioner, r)
+        # every shard's band covers its owned entities plus the w-1 halo
+        # slots a halo-slicing variant prepends
+        max_load = int(np.max(plan.planned_load)) + (w - 1)
+    band_bound = (w - 1) * int(max_load) + _SLACK
+    if observed_cand is not None and len(observed_cand) > 0:
+        cand_cap = min(int(max(observed_cand) * 1.25) + _SLACK, band_bound)
+    else:
+        cand_cap = band_bound
+    return CapSuggestion(cand_cap=cand_cap, pair_cap=band_bound,
+                         max_load=int(max_load))

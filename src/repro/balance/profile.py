@@ -89,7 +89,8 @@ class KeyProfile:
         idx = np.searchsorted(self.cum_entities, r, side="right")
         return self.uniq[np.minimum(idx, self.n_blocks - 1)]
 
-    def merge(self, other: "KeyProfile") -> "KeyProfile":
+    def merge(self, other: "KeyProfile", *,
+              remove: bool = False) -> "KeyProfile":
         """Combine two profiles into the profile of the CONCATENATED key
         sets — the incremental accumulator of the streaming analysis job
         (``repro.stream`` profiles each ingested chunk on device and folds
@@ -101,25 +102,40 @@ class KeyProfile:
         function of the merged counts via ``window.rank_prefix_comparisons``
         — ``a.merge(b)`` equals ``profile_keys(concat(a_keys, b_keys))``
         bit-for-bit.  Windows must match; merging with an empty profile is
-        the identity."""
+        the identity.
+
+        ``remove=True`` is the delete path of the serving layer
+        (``repro.serve``): ``other``'s counts are subtracted exactly —
+        ``a.merge(b).merge(b, remove=True)`` equals ``a`` bit-for-bit, so
+        planner cost models stay truthful under deletes.  Removing keys the
+        profile does not hold (or more copies than it holds) raises."""
         if self.window != other.window:
             raise ValueError(
                 f"cannot merge profiles with different windows "
                 f"({self.window} vs {other.window})")
         if other.n == 0:
             return self
-        if self.n == 0:
+        if not remove and self.n == 0:
             return other
+        sign = -1 if remove else 1
         allk = np.concatenate([self.uniq, other.uniq])
-        allc = np.concatenate([self.counts, other.counts])
+        allc = np.concatenate([self.counts, sign * other.counts])
         uniq, inv = np.unique(allk, return_inverse=True)
         counts = np.zeros(uniq.shape[0], np.int64)
         np.add.at(counts, inv, allc)
+        if remove:
+            if counts.min(initial=0) < 0:
+                bad = uniq[counts < 0][:8]
+                raise ValueError(
+                    f"cannot remove keys the profile does not hold "
+                    f"(over-removed keys, first few: {bad.tolist()})")
+            keep = counts > 0                  # reclaim emptied key blocks
+            uniq, counts = uniq[keep], counts[keep]
         cum_entities = np.cumsum(counts)
         cum_comparisons = np.asarray(
             W.rank_prefix_comparisons(cum_entities, self.window), np.int64)
         block_comparisons = np.diff(np.concatenate([[0], cum_comparisons]))
-        return KeyProfile(n=self.n + other.n, window=self.window,
+        return KeyProfile(n=self.n + sign * other.n, window=self.window,
                           uniq=uniq, counts=counts,
                           cum_entities=cum_entities,
                           block_comparisons=block_comparisons,

@@ -1,0 +1,378 @@
+"""Micro-batched serving layer: ``ResolutionService``.
+
+The front end of the online subsystem: callers submit entity inserts and
+deletes; a worker thread coalesces adjacent same-kind requests into
+micro-batches (up to ``max_batch`` entities or ``max_wait_ms``), drives the
+``DeltaMatcher`` once per batch, and resolves every request's future with
+the batch's ``IncrementalResult``.  Because delta calls ride the
+shape-bucket grid, a steady request stream hits the ``repro.perf``
+executable cache on every batch — the serving-path analogue of the
+stream's ``steady_chunks``.
+
+The service maintains the CURRENT pair sets (not a monotone union): the
+**served** sets are exactly what a from-scratch ``api.resolve`` of the
+live corpus under the same config would produce — for boundary-complete
+variants (repsn, jobsn) the maintained complete sets themselves; for SRP,
+complete minus the pairs straddling the profile-planned partition bounds
+(``delta.srp_straddle_packed``).  That equality holds after ANY
+interleaving of inserts and deletes and is what ``tests/test_serve.py``
+asserts property-style.
+
+Ordering semantics: requests apply in submission order; only ADJACENT
+same-kind requests coalesce, so a delete never leapfrogs the insert before
+it.  All requests in one micro-batch share the batch's result (``batched``
+reports the coalescing width).  Pair ids are stable for the service's
+lifetime: a pair that is retired and later re-created keeps its id.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future
+from typing import Dict, FrozenSet, NamedTuple, Optional, Tuple
+
+import numpy as np
+
+from repro.api import results as RES
+from repro.api.variants import get_variant
+from repro.core import entities as E
+from repro.perf import cache as PC
+from repro.serve.delta import DeltaMatcher, srp_straddle_packed
+from repro.serve.index import SortedIndex
+
+Pair = Tuple[int, int]
+_EMPTY = np.empty((0,), RES.PACKED_DTYPE)
+_STOP = object()
+
+
+class ServeStats(NamedTuple):
+    """Service telemetry snapshot (rides on every ``IncrementalResult``).
+
+    ``steady_batches`` counts micro-batches served ENTIRELY from the
+    executable cache (hits, zero builds/traces) — after warm-up every
+    batch should be steady; ``shapes`` lists the distinct (num_shards,
+    shard_cap) delta-call buckets seen, the quantity that must stay small
+    for that to hold.  ``batch_fill`` is the mean coalesced batch size
+    over ``max_batch``; ``p50_ms``/``p95_ms`` are submit-to-result
+    latencies over a sliding window."""
+    requests: int
+    batches: int
+    steady_batches: int
+    queue_depth: int
+    batch_fill: float
+    cache_hits: int
+    cache_misses: int
+    traces: int
+    device_calls: int
+    p50_ms: float
+    p95_ms: float
+    live_entities: int
+    index_runs: int
+    index_rows: int
+    tombstones: int
+    compactions: int
+    pairs: int
+    matches: int
+    shapes: Tuple[Tuple[int, int], ...]
+
+
+class IncrementalResult(NamedTuple):
+    """Outcome of one request (shared by its whole micro-batch).
+
+    ``new_pairs``/``retired_pairs`` are the SERVED blocked-set edits this
+    batch caused (both directions are real: an insert can retire old
+    pairs, a delete can create them); ``*_matches`` the matched-set edits.
+    ``pair_ids`` maps each NEW pair to its stable service-wide id."""
+    new_pairs: FrozenSet[Pair]
+    retired_pairs: FrozenSet[Pair]
+    new_matches: FrozenSet[Pair]
+    retired_matches: FrozenSet[Pair]
+    pair_ids: Dict[Pair, int]
+    batched: int
+    stats: ServeStats
+
+
+class _Request:
+    __slots__ = ("kind", "data", "n", "future", "t0")
+
+    def __init__(self, kind: str, data, n: int):
+        self.kind = kind
+        self.data = data
+        self.n = n
+        self.future: "Future[IncrementalResult]" = Future()
+        self.t0 = time.perf_counter()
+
+
+class ResolutionService:
+    """Online incremental entity resolution over one persistent corpus.
+
+        svc = ResolutionService(cfg, initial=base_corpus)
+        res = svc.resolve_incremental(new_ents)   # sync insert
+        res.new_pairs, res.retired_pairs
+        svc.delete([17, 42])                      # sync delete by eid
+        svc.pairs                                 # currently served set
+
+    ``submit_insert``/``submit_delete`` are the async forms (futures);
+    the sync forms go through the same queue, so concurrent callers
+    coalesce.  ``start=False`` skips the worker thread and processes
+    every request inline (single-caller tests/benchmarks).
+
+    The config must be single-pass, non-linkage, without
+    ``return_scores``; the service always executes delta calls on the
+    vmap runner, and SRP straddle correction uses ``cfg.num_shards`` —
+    served sets match a from-scratch vmap ``resolve`` under ``cfg``.
+    """
+
+    def __init__(self, cfg, *, initial=None, max_batch: int = 512,
+                 max_wait_ms: float = 2.0, queue_cap: int = 1024,
+                 spool_dir: Optional[str] = None, start: bool = True,
+                 segment_rows: int = 4096, max_runs: int = 12,
+                 max_tombstone_frac: float = 0.25,
+                 shard_buckets=(2, 4, 8), cap_floor: int = 64):
+        self.cfg = cfg
+        self._boundary_complete = get_variant(cfg.variant).boundary_complete
+        self.index = SortedIndex(cfg.window, spool_dir=spool_dir,
+                                 segment_rows=segment_rows,
+                                 max_runs=max_runs,
+                                 max_tombstone_frac=max_tombstone_frac)
+        self._delta = DeltaMatcher(cfg, self.index,
+                                   shard_buckets=shard_buckets,
+                                   cap_floor=cap_floor)
+        self.max_batch = int(max_batch)
+        self.max_wait_ms = float(max_wait_ms)
+        self._blocked = _EMPTY      # maintained COMPLETE sets
+        self._matched = _EMPTY
+        self._served_b = _EMPTY     # derived SERVED sets (post-straddle)
+        self._served_m = _EMPTY
+        self._pair_ids: Dict[int, int] = {}     # packed pair -> stable id
+        self._lock = threading.Lock()
+        self._latency = deque(maxlen=2048)      # seconds, sliding window
+        self._requests = 0
+        self._batches = 0
+        self._steady = 0
+        self._fill = 0.0
+        self._hits = self._misses = self._traces = 0
+        self._device_calls = 0
+        self._shapes: set = set()
+        self._q: "queue.Queue" = queue.Queue(maxsize=queue_cap)
+        self._worker: Optional[threading.Thread] = None
+        self._closed = False
+        if start:
+            self._worker = threading.Thread(target=self._run,
+                                            name="resolution-serve",
+                                            daemon=True)
+            self._worker.start()
+        if initial is not None:
+            self.resolve_incremental(initial)
+
+    # -- submission ----------------------------------------------------------
+
+    def submit_insert(self, ents) -> "Future[IncrementalResult]":
+        """Enqueue an insert of NEW entities (device or host entity dict;
+        invalid rows are dropped, live-eid collisions raise).  Blocks for
+        backpressure when the bounded queue is full."""
+        h = ents if isinstance(ents.get("key"), np.ndarray) \
+            else E.to_host(ents)
+        return self._submit(_Request("insert", h, int(h["key"].shape[0])))
+
+    def submit_delete(self, eids) -> "Future[IncrementalResult]":
+        """Enqueue a delete of live entities by eid (unknown or already-
+        deleted eids fail the whole request)."""
+        arr = np.asarray(eids, np.int64).reshape(-1)
+        return self._submit(_Request("delete", arr, int(arr.shape[0])))
+
+    def resolve_incremental(self, ents) -> IncrementalResult:
+        """Synchronous insert: submit and wait for the batch result."""
+        return self.submit_insert(ents).result()
+
+    def delete(self, eids) -> IncrementalResult:
+        """Synchronous delete: submit and wait for the batch result."""
+        return self.submit_delete(eids).result()
+
+    def _submit(self, req: _Request) -> "Future[IncrementalResult]":
+        if self._closed:
+            raise RuntimeError("service is closed")
+        if self._worker is None:
+            self._process([req])
+        else:
+            self._q.put(req)
+        return req.future
+
+    # -- worker --------------------------------------------------------------
+
+    def _run(self) -> None:
+        pending: Optional[_Request] = None
+        running = True
+        while running:
+            req = pending if pending is not None else self._q.get()
+            pending = None
+            if req is _STOP:
+                break
+            group = [req]
+            n = req.n
+            deadline = time.monotonic() + self.max_wait_ms * 1e-3
+            while n < self.max_batch:
+                wait = deadline - time.monotonic()
+                if wait <= 0:
+                    break
+                try:
+                    nxt = self._q.get(timeout=wait)
+                except queue.Empty:
+                    break
+                if nxt is _STOP:
+                    running = False
+                    break
+                if nxt.kind != req.kind:
+                    # a kind change closes the batch: submission order is
+                    # preserved exactly
+                    pending = nxt
+                    break
+                group.append(nxt)
+                n += nxt.n
+            self._process(group)
+        if pending is not None and pending is not _STOP:
+            self._process([pending])
+
+    def _process(self, group) -> None:
+        try:
+            result = self._apply_batch(group)
+            for r in group:
+                r.future.set_result(result)
+        except BaseException as exc:  # noqa: BLE001 — forwarded to callers
+            for r in group:
+                r.future.set_exception(exc)
+
+    def _apply_batch(self, group) -> IncrementalResult:
+        kind = group[0].kind
+        with self._lock:
+            cache = PC.executable_cache()
+            before = cache.stats.snapshot()
+            if kind == "insert":
+                h = group[0].data if len(group) == 1 else \
+                    E.host_concat([r.data for r in group])
+                dev = E.make_entities(h["key"], h["eid"],
+                                      payload=h["payload"],
+                                      valid=h["valid"])
+                nb, nm, dstats = self._delta.insert(dev, self._blocked,
+                                                    self._matched)
+            else:
+                eids = np.concatenate([r.data for r in group])
+                nb, nm, dstats = self._delta.delete(eids, self._blocked,
+                                                    self._matched)
+            self._blocked, self._matched = nb, nm
+            dh, dm, dt = cache.stats.delta(before)
+            self._hits += dh
+            self._misses += dm
+            self._traces += dt
+            self._steady += int(dstats.device_calls > 0
+                                and dh > 0 and dm == 0 and dt == 0)
+            self._batches += 1
+            self._requests += len(group)
+            self._fill += min(1.0, sum(r.n for r in group)
+                              / max(self.max_batch, 1))
+            self._device_calls += dstats.device_calls
+            self._shapes.update(dstats.shapes)
+            self.index.maybe_compact()
+
+            old_sb, old_sm = self._served_b, self._served_m
+            if self._boundary_complete:
+                self._served_b, self._served_m = nb, nm
+            else:
+                straddle = srp_straddle_packed(self.index, self.cfg)
+                self._served_b = np.setdiff1d(nb, straddle)
+                self._served_m = np.setdiff1d(nm, straddle)
+            new_p = np.setdiff1d(self._served_b, old_sb)
+            gone_p = np.setdiff1d(old_sb, self._served_b)
+            new_m = np.setdiff1d(self._served_m, old_sm)
+            gone_m = np.setdiff1d(old_sm, self._served_m)
+            ids = {}
+            for packed in new_p.tolist():
+                pid = self._pair_ids.get(packed)
+                if pid is None:
+                    pid = len(self._pair_ids)
+                    self._pair_ids[packed] = pid
+                ids[(packed >> 32, packed & 0xFFFFFFFF)] = pid
+            now = time.perf_counter()
+            for r in group:
+                self._latency.append(now - r.t0)
+            stats = self._stats_locked()
+        return IncrementalResult(
+            new_pairs=RES.packed_to_frozenset(new_p),
+            retired_pairs=RES.packed_to_frozenset(gone_p),
+            new_matches=RES.packed_to_frozenset(new_m),
+            retired_matches=RES.packed_to_frozenset(gone_m),
+            pair_ids=ids, batched=len(group), stats=stats)
+
+    # -- state ---------------------------------------------------------------
+
+    @property
+    def packed_pairs(self) -> np.ndarray:
+        """Currently served blocked set, packed (sorted unique uint64)."""
+        with self._lock:
+            return self._served_b
+
+    @property
+    def packed_matches(self) -> np.ndarray:
+        """Currently served matched set, packed."""
+        with self._lock:
+            return self._served_m
+
+    @property
+    def pairs(self) -> FrozenSet[Pair]:
+        """Currently served blocked set as (lo, hi) eid tuples."""
+        return RES.packed_to_frozenset(self.packed_pairs)
+
+    @property
+    def matches(self) -> FrozenSet[Pair]:
+        """Currently served matched set as (lo, hi) eid tuples."""
+        return RES.packed_to_frozenset(self.packed_matches)
+
+    def pair_id(self, pair: Pair) -> int:
+        """Stable id of a pair the service has served at any point."""
+        return self._pair_ids[(int(pair[0]) << 32) | int(pair[1])]
+
+    def _stats_locked(self) -> ServeStats:
+        lat = sorted(self._latency)
+        pct = (lambda p: 1e3 * lat[min(len(lat) - 1,
+                                       int(p * (len(lat) - 1)))]) \
+            if lat else (lambda p: 0.0)
+        return ServeStats(
+            requests=self._requests, batches=self._batches,
+            steady_batches=self._steady,
+            queue_depth=self._q.qsize(),
+            batch_fill=self._fill / max(self._batches, 1),
+            cache_hits=self._hits, cache_misses=self._misses,
+            traces=self._traces, device_calls=self._device_calls,
+            p50_ms=pct(0.50), p95_ms=pct(0.95),
+            live_entities=self.index.n_live,
+            index_runs=self.index.n_runs, index_rows=self.index.n_rows,
+            tombstones=self.index.tombstones,
+            compactions=self.index.compactions,
+            pairs=int(self._served_b.shape[0]),
+            matches=int(self._served_m.shape[0]),
+            shapes=tuple(sorted(self._shapes)))
+
+    def stats(self) -> ServeStats:
+        """Current telemetry snapshot."""
+        with self._lock:
+            return self._stats_locked()
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def close(self) -> None:
+        """Drain the queue, stop the worker, and refuse new submissions."""
+        if self._closed:
+            return
+        self._closed = True
+        if self._worker is not None:
+            self._q.put(_STOP)
+            self._worker.join()
+            self._worker = None
+
+    def __enter__(self) -> "ResolutionService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

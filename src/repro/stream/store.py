@@ -114,6 +114,22 @@ class ChunkStore:
         the first append)."""
         return self._schema or ()
 
+    def dispose(self) -> None:
+        """Drop every stored chunk and delete its spooled file (best-effort
+        — a file already gone is not an error).  The compaction path of the
+        serving index (``repro.serve``) rewrites its sorted runs into a
+        fresh store and disposes the old one so tombstoned bytes are
+        actually reclaimed from the spool directory."""
+        for path in self._paths:
+            if path:
+                try:
+                    os.remove(path)
+                except OSError:
+                    pass
+        self.spooled_bytes = 0
+        self._mem = []
+        self._paths = []
+
     def __iter__(self) -> Iterator[dict]:
         """Yield every chunk in append order (each loaded on demand)."""
         for i in range(len(self)):

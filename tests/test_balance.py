@@ -277,3 +277,66 @@ def test_explicit_plan_equals_derived(ents):
     assert a.blocking.pairs == b.blocking.pairs
     assert a.matches == b.matches
     assert a.balance == b.balance
+
+
+def _profiles_equal(a, b):
+    return (a.n == b.n and a.window == b.window
+            and np.array_equal(a.uniq, b.uniq)
+            and np.array_equal(a.counts, b.counts)
+            and np.array_equal(a.cum_entities, b.cum_entities)
+            and np.array_equal(a.block_comparisons, b.block_comparisons)
+            and np.array_equal(a.cum_comparisons, b.cum_comparisons))
+
+
+def test_profile_merge_remove_roundtrip(ents):
+    """The serve-layer delete path: a.merge(b).merge(b, remove=True) is
+    bit-for-bit ``a`` — every derived column, not just the counts."""
+    keys = np.asarray(ents["key"])
+    a = B.profile_keys(keys[:900], window=W)
+    b = B.profile_keys(keys[900:], window=W)
+    merged = a.merge(b)
+    assert _profiles_equal(merged, B.profile_keys(keys, window=W))
+    assert _profiles_equal(merged.merge(b, remove=True), a)
+    # removing a whole profile reaches the exact empty identity
+    gone = merged.merge(a, remove=True).merge(b, remove=True)
+    assert gone.n == 0 and gone.n_blocks == 0
+    # removed key blocks are reclaimed, not kept at count zero
+    only_a = merged.merge(b, remove=True)
+    assert only_a.n_blocks == a.n_blocks
+
+
+def test_profile_remove_rejects_overdraw(ents):
+    keys = np.asarray(ents["key"])
+    a = B.profile_keys(keys[:100], window=W)
+    with pytest.raises(ValueError, match="over-removed"):
+        a.merge(B.profile_keys(keys[:200], window=W), remove=True)
+    # a key the profile never held is an overdraw too
+    alien = B.profile_keys(np.asarray([2 ** 29], np.int32), window=W)
+    with pytest.raises(ValueError, match="over-removed"):
+        a.merge(alien, remove=True)
+
+
+def test_suggest_caps_never_overflow(ents):
+    """Profile-derived capacities replace the manual probe loop: under the
+    suggested caps an emit='pairs' resolve of skewed data must not
+    overflow and must keep the exact pair set."""
+    cfg = _cfg(partitioner="blocksplit", emit="pairs")
+    prof = B.profile_keys(np.asarray(ents["key"]), window=W)
+    caps = B.suggest_caps(prof, cfg)
+    assert caps.pair_cap == (W - 1) * caps.max_load + 16
+    capped = api.resolve(ents, cfg.with_(cand_cap=caps.cand_cap,
+                                         pair_cap=caps.pair_cap))
+    free = api.resolve(ents, cfg)
+    assert capped.blocking.pair_overflow == 0
+    assert capped.blocking.pairs == free.blocking.pairs
+    assert capped.matches == free.matches
+    # observed survivor counts tighten cand_cap below the band bound
+    probe = api.resolve(ents, cfg.with_(band_engine="pallas",
+                                        band_interpret=True))
+    tight = B.suggest_caps(prof, cfg, observed_cand=probe.blocking.cand_count)
+    assert tight.cand_cap <= caps.cand_cap
+    assert tight.pair_cap == caps.pair_cap
+    with pytest.raises(ValueError, match="empty profile"):
+        B.suggest_caps(B.KeyProfile.empty(W), cfg)
+    explicit = B.suggest_caps(B.KeyProfile.empty(W), cfg, max_load=128)
+    assert explicit.pair_cap == (W - 1) * 128 + 16

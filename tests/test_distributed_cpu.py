@@ -152,23 +152,3 @@ def test_train_step_distributed_runs():
     """)
     assert np.isfinite(out["loss"]) if (np := __import__("numpy")) else True
     assert out["gnorm"] > 0
-
-
-def test_serve_engine_generates():
-    out = run_with_devices(1, """
-        import numpy as np, jax, jax.numpy as jnp
-        from repro.configs import ARCHS, smoke_variant
-        from repro.models import lm
-        from repro.serve.engine import ServeEngine
-        cfg = smoke_variant(ARCHS["qwen1.5-110b"])
-        params = lm.lm_init(jax.random.PRNGKey(0), cfg, jnp.float32)
-        eng = ServeEngine(cfg=cfg, params=params, max_len=64, batch=2)
-        prompts = np.random.default_rng(0).integers(
-            0, cfg.vocab_size, (2, 16)).astype(np.int32)
-        toks = eng.generate(prompts, n_new=8)
-        out = {"shape": list(toks.shape),
-               "in_vocab": bool((toks >= 0).all()
-                                and (toks < cfg.vocab_size).all())}
-    """)
-    assert out["shape"] == [2, 8]
-    assert out["in_vocab"]

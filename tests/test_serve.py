@@ -1,0 +1,284 @@
+"""Online incremental serving correctness (ISSUE 6).
+
+  * the service's served pair/match sets stay BIT-IDENTICAL to a
+    from-scratch ``resolve`` over the live entities after any interleaving
+    of inserts and deletes — all three variants x {scan, pallas}, including
+    micro-batches smaller than the window and deletes inside previously
+    delta-matched neighborhoods
+  * every result's edits are a consistent delta: prev_served − retired +
+    new == served
+  * micro-batcher: adjacent same-kind requests coalesce up to
+    max_batch/max_wait; a kind change closes the batch (order preserved)
+  * steady state: identically-shaped micro-batches are served entirely
+    from the executable cache (zero retraces after warm-up)
+  * compaction: tombstoned rows + spool files reclaimed, served sets
+    unchanged, mutations after compaction stay exact; deleted eids may be
+    re-inserted
+  * service/index guardrails: duplicate or unknown eids, unsupported
+    configs, empty ops
+"""
+import glob
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import entities as E
+from repro.serve import SortedIndex
+
+N, R, W = 520, 4, 6
+VARIANTS = ["srp", "repsn", "jobsn"]
+ENGINES = ["scan", "pallas"]
+
+
+def _cfg(**kw):
+    kw.setdefault("window", W)
+    kw.setdefault("num_shards", R)
+    kw.setdefault("variant", "repsn")
+    kw.setdefault("hops", R - 1)
+    kw.setdefault("runner", "vmap")
+    if kw.get("band_engine") == "pallas":
+        kw.setdefault("band_interpret", True)
+        kw.setdefault("band_block", 64)
+    return api.ERConfig(**kw)
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    rng = np.random.default_rng(11)
+    return E.to_host(E.synth_entities(rng, N, n_keys=70, dup_frac=0.25))
+
+
+def _take(h, sel):
+    return E.host_take(h, sel)
+
+
+def _resolve_live(h_live, cfg):
+    dev = E.make_entities(h_live["key"], h_live["eid"],
+                          payload=h_live["payload"], valid=h_live["valid"])
+    return api.resolve(dev, cfg)
+
+
+def _assert_parity(svc, corpus, live_mask, cfg):
+    ref = _resolve_live(_take(corpus, np.flatnonzero(live_mask)), cfg)
+    assert svc.pairs == ref.blocking.pairs
+    assert svc.matches == ref.matches
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_interleaved_parity(corpus, variant, engine):
+    """The tentpole contract: serve == from-scratch resolve at every point
+    of an insert/delete interleaving (small batches, neighborhood-internal
+    deletes, skewed order)."""
+    cfg = _cfg(variant=variant, band_engine=engine)
+    svc = api.serve(cfg, initial=_take(corpus, slice(0, 300)), start=False)
+    live = np.zeros(N, bool)
+    live[:300] = True
+    _assert_parity(svc, corpus, live, cfg)
+
+    prev = svc.pairs
+    eid = corpus["eid"]
+    ops = [
+        ("insert", slice(300, 303)),          # batch far below the window
+        ("delete", eid[150:154]),             # inside the initial corpus
+        ("insert", slice(303, 380)),
+        ("delete", np.concatenate([eid[301:302], eid[320:350]])),
+        ("insert", slice(380, 420)),
+    ]
+    for kind, arg in ops:
+        if kind == "insert":
+            res = svc.resolve_incremental(_take(corpus, arg))
+            live[arg] = True
+        else:
+            res = svc.delete(arg)
+            live[np.isin(eid, arg)] = False
+        # the reported edits must BE the delta between served snapshots
+        assert (prev - res.retired_pairs) | res.new_pairs == svc.pairs
+        assert res.new_pairs.isdisjoint(prev)
+        assert res.retired_pairs <= prev
+        prev = svc.pairs
+        _assert_parity(svc, corpus, live, cfg)
+
+
+def test_delete_creates_and_insert_retires(corpus):
+    """Maintained-set (not monotone-union) semantics: a delete can CREATE
+    pairs (survivors pulled together) and an insert can RETIRE pairs
+    (old neighbors pushed beyond w-1)."""
+    cfg = _cfg()
+    svc = api.serve(cfg, initial=_take(corpus, slice(0, 300)), start=False)
+    # delete a contiguous run of mid-corpus ranks: entities on both sides
+    # of the hole move within w-1 of each other
+    mid = svc.index.eids_at_ranks(140, 160)
+    res = svc.delete(mid)
+    assert res.new_pairs, "delete should pull survivors into the window"
+    # re-inserting the same entities must push those pairs back out
+    rows = np.flatnonzero(np.isin(corpus["eid"][:300], mid))
+    res2 = svc.resolve_incremental(_take(corpus, rows))
+    assert res2.retired_pairs >= res.new_pairs
+
+
+def test_microbatcher_coalesces_and_preserves_order(corpus):
+    cfg = _cfg()
+    svc = api.serve(cfg, initial=_take(corpus, slice(0, 200)),
+                    max_batch=400, max_wait_ms=250.0)
+    try:
+        futs = [svc.submit_insert(_take(corpus, slice(200 + 5 * i,
+                                                      205 + 5 * i)))
+                for i in range(6)]
+        res = [f.result() for f in futs]
+        # all six tiny inserts ride ONE delta call
+        assert all(r.batched == 6 for r in res)
+        assert res[0] is res[5]
+        # a kind change closes the batch: delete of a just-inserted eid
+        # must see it live
+        fi = svc.submit_insert(_take(corpus, slice(230, 240)))
+        fd = svc.submit_delete(corpus["eid"][232:234])
+        fi.result(), fd.result()
+        live = np.zeros(N, bool)
+        live[:240] = True
+        live[232:234] = False
+        _assert_parity(svc, corpus, live, cfg)
+        st = svc.stats()
+        # 1 bootstrap + 6 coalesced + insert + delete
+        assert st.requests == 9 and st.batches <= 4
+        assert st.p95_ms >= st.p50_ms > 0.0
+    finally:
+        svc.close()
+    with pytest.raises(RuntimeError):
+        svc.resolve_incremental(_take(corpus, slice(240, 241)))
+
+
+def test_steady_state_is_zero_retrace(corpus):
+    """Shape bucketing: after warm-up, identically-sized micro-batches are
+    pure executable-cache hits — traces must not grow with requests."""
+    cfg = _cfg()
+    svc = api.serve(cfg, initial=_take(corpus, slice(0, 300)), start=False)
+    for i in range(3):                                   # warm the buckets
+        svc.resolve_incremental(_take(corpus, slice(300 + 10 * i,
+                                                    310 + 10 * i)))
+    warm = svc.stats()
+    for i in range(3, 8):
+        res = svc.resolve_incremental(_take(corpus, slice(300 + 10 * i,
+                                                          310 + 10 * i)))
+    st = res.stats
+    assert st.traces == warm.traces
+    assert st.cache_misses == warm.cache_misses
+    assert st.cache_hits > warm.cache_hits
+    assert st.steady_batches - warm.steady_batches == 5
+    assert len(st.shapes) == len(warm.shapes)
+
+
+def test_compaction_reclaims_and_preserves(corpus, tmp_path):
+    cfg = _cfg(num_shards=2, hops=1)
+    spool = str(tmp_path / "serve")
+    svc = api.serve(cfg, initial=_take(corpus, slice(0, 200)), start=False,
+                    spool_dir=spool, segment_rows=64, max_runs=3,
+                    max_tombstone_frac=0.1)
+    live = np.zeros(N, bool)
+    live[:200] = True
+    for i in range(5):
+        svc.resolve_incremental(_take(corpus, slice(200 + 20 * i,
+                                                    220 + 20 * i)))
+    live[200:300] = True
+    gone = corpus["eid"][10:40]
+    svc.delete(gone)
+    live[10:40] = False
+    st = svc.stats()
+    assert st.compactions >= 1
+    assert st.tombstones == 0 and st.index_rows == st.live_entities
+    # old-generation spool files are actually deleted
+    assert all("g000" not in p for p in glob.glob(spool + "/*.npz"))
+    _assert_parity(svc, corpus, live, cfg)
+    # a deleted eid is re-insertable, and mutations after compaction are
+    # still exact
+    svc.resolve_incremental(_take(corpus, slice(10, 25)))
+    live[10:25] = True
+    _assert_parity(svc, corpus, live, cfg)
+
+
+def test_service_guardrails(corpus):
+    with pytest.raises(ValueError):
+        api.serve(_cfg(passes=("key",)))
+    with pytest.raises(ValueError):
+        api.serve(_cfg(linkage=True))
+    with pytest.raises(ValueError):
+        api.serve(_cfg(return_scores=True))
+    svc = api.serve(_cfg(), initial=_take(corpus, slice(0, 100)),
+                    start=False)
+    with pytest.raises(ValueError):            # live-eid collision
+        svc.resolve_incremental(_take(corpus, slice(50, 60)))
+    with pytest.raises(ValueError):            # unknown delete
+        svc.delete(np.asarray([999999], np.int64))
+    before = svc.pairs
+    empty = _take(corpus, np.zeros((0,), np.int64))
+    assert svc.resolve_incremental(empty).new_pairs == frozenset()
+    assert svc.pairs == before
+    # failed requests leave the state untouched
+    _assert_parity(svc, corpus,
+                   np.arange(N) < 100, _cfg())
+
+
+def test_delete_all_then_rebuild(corpus):
+    cfg = _cfg(num_shards=2, hops=1)
+    svc = api.serve(cfg, initial=_take(corpus, slice(0, 60)), start=False)
+    svc.delete(corpus["eid"][:60])
+    assert svc.pairs == frozenset() and svc.stats().live_entities == 0
+    svc.resolve_incremental(_take(corpus, slice(30, 90)))
+    live = np.zeros(N, bool)
+    live[30:90] = True
+    _assert_parity(svc, corpus, live, cfg)
+
+
+def test_pair_ids_are_stable(corpus):
+    svc = api.serve(_cfg(), initial=_take(corpus, slice(0, 300)),
+                    start=False)
+    mid = svc.index.eids_at_ranks(140, 160)
+    res = svc.delete(mid)
+    created = next(iter(res.new_pairs))
+    pid = res.pair_ids[created]
+    rows = np.flatnonzero(np.isin(corpus["eid"][:300], mid))
+    svc.resolve_incremental(_take(corpus, rows))     # retires it again
+    res3 = svc.delete(mid)                           # ...and re-creates it
+    assert res3.pair_ids[created] == pid
+    assert svc.pair_id(created) == pid
+
+
+def test_sorted_index_units(tmp_path):
+    rng = np.random.default_rng(3)
+    idx = SortedIndex(W, spool_dir=str(tmp_path / "idx"))
+    h = E.to_host(E.synth_entities(rng, 100, n_keys=20))
+    dev = E.make_entities(h["key"], h["eid"], payload=h["payload"],
+                          valid=h["valid"])
+    run = E.sort_chunk(dev)
+    idx.insert(run)
+    assert idx.n_live == 100
+    # the flat rank index is the (key, eid) sort order
+    assert np.array_equal(idx.live_comps, np.sort(idx.live_comps))
+    comps = idx.comps_of(h["eid"][:5])
+    ranks = np.searchsorted(idx.live_comps, comps)
+    assert np.array_equal(idx.eids_at_ranks(int(ranks[0]),
+                                            int(ranks[0]) + 1),
+                          np.asarray(h["eid"][:1], np.int64))
+    # a comp-range materialization returns exactly the ranks' entities
+    region = idx.take_comp_range(int(idx.live_comps[10]),
+                                 int(idx.live_comps[19]))
+    assert np.array_equal(np.asarray(region["eid"], np.int64),
+                          idx.eids_at_ranks(10, 20))
+    with pytest.raises(ValueError):
+        idx.insert(run)                            # duplicate eids
+    idx.delete(h["eid"][:10])
+    with pytest.raises(ValueError):
+        idx.comps_of(h["eid"][:1])                 # tombstoned
+    assert idx.n_live == 90 and idx.tombstones == 10
+    # profile decrement is exact: equals profiling the survivors
+    from repro import balance as B
+    surv = np.asarray(run["key"])[~np.isin(np.asarray(run["eid"], np.int64),
+                                           np.asarray(h["eid"][:10],
+                                                      np.int64))]
+    q = B.profile_keys(surv, window=W)
+    assert np.array_equal(idx.profile.uniq, q.uniq)
+    assert np.array_equal(idx.profile.counts, q.counts)
+    idx.compact()
+    assert idx.tombstones == 0 and idx.n_rows == idx.n_live == 90
+    assert np.array_equal(idx.profile.uniq, q.uniq)
