@@ -37,6 +37,10 @@ stays as an alias of ``steady_seconds`` for downstream readers.
                            (inserts/s, p50/p95 latency, zero-retrace steady
                            state, final parity vs from-scratch resolve) —
                            the BENCH_serve.json baseline
+  * resilience_body      — fault tolerance (ISSUE 7): checkpointed stream
+                           overhead vs plain streaming, kill/resume wall
+                           time + parity, overflow-retry zero-dropped-pairs
+                           — the BENCH_resilience.json baseline
 """
 from __future__ import annotations
 
@@ -576,3 +580,124 @@ def jobsn_vs_repsn_body(n: int = 60_000, w: int = 50, n_keys: int = 4096,
             "all_to_all_bytes": an["collectives"]["all-to-all"]["bytes"],
         }
     return out
+
+
+def resilience_body(n: int = 24_000, chunk: int = 6_000, w: int = 10,
+                    n_keys: int = 2048, r: int = 4, reps: int = 3,
+                    kill_at: int = 2) -> dict:
+    """Fault tolerance (ISSUE 7 acceptance): what durability costs and
+    what recovery buys.
+
+    Three measurements on the streaming corpus (``n = 4x chunk``, repsn):
+
+      * checkpoint overhead — steady wall time of a checkpointed
+        ``resolve_stream`` (fresh checkpoint directory per rep, so every
+        rep pays the full spool/manifest write path) over a plain
+        OUT-OF-CORE stream (``spool_dir`` set, fresh per rep): both paths
+        spool raw chunks + sorted runs to disk, so the ratio isolates the
+        durability writes — per-chunk pair spool, carry halo, manifest
+        commit.  The gate holds it at <= 15%.  The in-memory plain stream
+        is also reported (``inmem_steady_seconds``) as the no-disk
+        reference point
+      * kill/resume — a FaultPlan kills the run after chunk ``kill_at``
+        commits; ``api.resume`` finishes from the checkpoint.  Reports
+        both halves' wall time and resumed-vs-plain pair parity
+      * overflow retry — srp pair emission under a deliberately tiny
+        pair_cap with ``on_overflow="retry"``: the cap ladder must recover
+        EVERY pair an unbounded run emits (zero dropped), and the retry /
+        escalation counts show the sticky-cap convergence
+    """
+    import os
+    import shutil
+    import tempfile
+
+    import jax
+    from repro import api, stream
+    from repro.data.corpus import synth_entity_chunks
+    from repro.resilience import FaultPlan, InjectedFault, micro_caps
+
+    def chunks():
+        return synth_entity_chunks(0, n, chunk, n_keys=n_keys,
+                                   dup_frac=0.2)
+
+    cfg = api.ERConfig(window=w, variant="repsn", hops=r - 1,
+                       runner="vmap", num_shards=r)
+    root = tempfile.mkdtemp(prefix="bench_resilience_")
+    try:
+        _, inmem_steady, plain = _cold_steady(
+            lambda: stream.resolve_stream(chunks(), cfg, chunk_size=chunk),
+            steady_reps=reps)
+
+        seq = {"plain": 0, "ck": 0}
+
+        def spooled_run():
+            d = os.path.join(root, f"plain{seq['plain']}")
+            seq["plain"] += 1
+            return stream.resolve_stream(chunks(), cfg, chunk_size=chunk,
+                                         spool_dir=d)
+
+        def ckpt_run():
+            d = os.path.join(root, f"ck{seq['ck']}")
+            seq["ck"] += 1
+            return stream.resolve_stream(chunks(), cfg, chunk_size=chunk,
+                                         checkpoint_dir=d)
+
+        plain_cold, plain_steady, _ = _cold_steady(spooled_run,
+                                                   steady_reps=reps)
+        ck_cold, ck_steady, ck = _cold_steady(ckpt_run, steady_reps=reps)
+
+        d = os.path.join(root, "kill")
+        t0 = time.perf_counter()
+        try:
+            stream.resolve_stream(chunks(), cfg, chunk_size=chunk,
+                                  checkpoint_dir=d,
+                                  fault_plan=FaultPlan(
+                                      crash_after_chunk=kill_at))
+        except InjectedFault:
+            pass
+        killed_seconds = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        resumed = api.resume(d)
+        resume_seconds = time.perf_counter() - t0
+
+        pcfg = cfg.with_(variant="srp", emit="pairs",
+                         partitioner="uniform")
+        base = stream.resolve_stream(chunks(), pcfg.with_(pair_cap=0),
+                                     chunk_size=chunk)
+        rcfg = micro_caps(pcfg, pair_cap=64).with_(
+            cand_cap=None, on_overflow="retry", retry_limit=12)
+        rres = stream.resolve_stream(chunks(), rcfg, chunk_size=chunk)
+
+        return {
+            "n": n, "chunk": chunk, "w": w, "r": r,
+            "backend": jax.default_backend(),
+            "inmem_steady_seconds": inmem_steady,
+            "plain_cold_seconds": plain_cold,
+            "plain_steady_seconds": plain_steady,
+            "ckpt_cold_seconds": ck_cold,
+            "ckpt_steady_seconds": ck_steady,
+            "seconds": ck_steady,
+            "checkpoint_overhead": ck_steady / max(plain_steady, 1e-9),
+            "pairs": len(plain.pairs),
+            "resume": {
+                "kill_at": kill_at,
+                "chunks": resumed.stream.chunks,
+                "killed_seconds": killed_seconds,
+                "resume_seconds": resume_seconds,
+                "blocked_equal": resumed.pairs == plain.pairs,
+                "matched_equal": resumed.matches == plain.matches,
+            },
+            "checkpointed_parity": ck.pairs == plain.pairs,
+            "retry": {
+                "start_pair_cap": 64,
+                "final_pair_cap": rres.resilience.pair_cap,
+                "retries": rres.resilience.retries,
+                "escalations": rres.resilience.escalations,
+                "pair_overflow": rres.blocking.pair_overflow,
+                "dropped_pairs": len(base.pairs) - len(rres.pairs),
+                "blocked_equal": rres.pairs == base.pairs,
+                "matched_equal": rres.matches == base.matches,
+            },
+        }
+    finally:
+        shutil.rmtree(root, ignore_errors=True)

@@ -149,6 +149,53 @@ def check_serve(blob: dict) -> list:
     return failures
 
 
+def check_resilience(blob: dict) -> list:
+    """Machine-independent structural gates over a BENCH_resilience.json:
+    checkpointing must stay cheap (steady checkpointed stream <= 15% over
+    the plain stream — both halves of the ratio come from the same run, so
+    machine class divides out), the killed-and-resumed run must reproduce
+    the plain stream's pair sets bit-identically, and the overflow-retry
+    ladder must drop ZERO pairs while actually exercising a retry."""
+    failures = []
+    overhead = float(blob.get("checkpoint_overhead", 0.0))
+    if overhead <= 0.0:
+        failures.append("resilience run reported no checkpoint_overhead")
+    elif overhead > 1.15:
+        failures.append(
+            f"checkpointed streaming costs {(overhead - 1) * 100:.1f}% "
+            f"over the plain stream (> 15%): the spool/manifest write "
+            f"path is no longer amortized by the chunk compute")
+    if blob.get("checkpointed_parity") is not True:
+        failures.append("checkpointed stream broke pair parity with the "
+                        "plain stream")
+    rs = blob.get("resume", {})
+    if not (rs.get("blocked_equal") and rs.get("matched_equal")):
+        failures.append(
+            f"kill/resume broke parity (blocked={rs.get('blocked_equal')} "
+            f"matched={rs.get('matched_equal')}): the resumed union must "
+            f"be bit-identical to an uninterrupted run (invariant 11)")
+    rt = blob.get("retry", {})
+    if int(rt.get("dropped_pairs", 1)) != 0 \
+            or rt.get("blocked_equal") is not True:
+        failures.append(
+            f"overflow retry dropped {rt.get('dropped_pairs')} pairs "
+            f"(blocked_equal={rt.get('blocked_equal')}): the cap ladder "
+            f"must recover every pair an unbounded run emits")
+    if int(rt.get("pair_overflow", 1)) != 0:
+        failures.append(
+            f"overflow retry finished with pair_overflow="
+            f"{rt.get('pair_overflow')}: the final execution must fit")
+    if int(rt.get("retries", 0)) < 1:
+        failures.append("overflow retry never retried — the micro-cap "
+                        "workload no longer exercises the ladder")
+    print(f"perf_smoke resilience: overhead={overhead:.3f} "
+          f"resume_parity={rs.get('blocked_equal')} "
+          f"retries={rt.get('retries')} "
+          f"dropped={rt.get('dropped_pairs')} "
+          f"-> {'OK' if not failures else 'FAIL'}")
+    return failures
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("baseline", help="committed BENCH_band_engine.json")
@@ -159,6 +206,11 @@ def main() -> None:
                     help="optional freshly generated BENCH_serve.json — "
                          "adds the serving structural gates (zero-retrace "
                          "steady state, parity)")
+    ap.add_argument("--resilience", default=None,
+                    help="optional freshly generated BENCH_resilience.json "
+                         "— adds the fault-tolerance structural gates "
+                         "(checkpoint overhead <= 15%%, resume parity, "
+                         "zero dropped pairs under retry)")
     args = ap.parse_args()
     with open(args.baseline) as f:
         baseline = json.load(f)
@@ -168,6 +220,9 @@ def main() -> None:
     if args.serve:
         with open(args.serve) as f:
             failures += check_serve(json.load(f))
+    if args.resilience:
+        with open(args.resilience) as f:
+            failures += check_resilience(json.load(f))
     if failures:
         for msg in failures:
             print(f"perf_smoke FAIL: {msg}", file=sys.stderr)

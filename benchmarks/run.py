@@ -20,6 +20,9 @@ Tables:
                         inserts/deletes into a ResolutionService
                         (inserts/s, p50/p95 latency, zero-retrace steady
                         state, parity); writes BENCH_serve.json
+  resilience            fault tolerance: checkpointed stream overhead,
+                        kill/resume wall time + parity, overflow-retry
+                        zero-dropped-pairs; writes BENCH_resilience.json
   kernels               Pallas band kernels vs jnp oracle (CPU timings)
   dedup_e2e             end-to-end corpus dedup throughput + SN-vs-n^2 factor
   roofline              summary of dry-run roofline terms (needs artifacts)
@@ -181,6 +184,35 @@ def serve(quick: bool):
         json.dump(res, f, indent=2)
 
 
+def resilience(quick: bool):
+    """Fault tolerance (ISSUE 7 acceptance): checkpoint write overhead vs
+    plain streaming, kill-at-chunk-k resume wall time + pair parity, and
+    the overflow-retry ladder recovering every pair a tiny pair_cap would
+    have dropped.  Writes BENCH_resilience.json (gated by perf_smoke
+    --resilience: overhead <= 15%, zero dropped pairs, parity)."""
+    from benchmarks.bench_sn import resilience_body
+    res = resilience_body(n=4_800 if quick else 24_000,
+                          chunk=1_200 if quick else 6_000,
+                          w=8 if quick else 10, r=4, reps=3)
+    _row("resilience_ckpt", res["ckpt_steady_seconds"] * 1e6,
+         f"plain_us={res['plain_steady_seconds'] * 1e6:.0f};"
+         f"overhead={res['checkpoint_overhead']:.3f};"
+         f"parity={res['checkpointed_parity']}")
+    rs = res["resume"]
+    _row("resilience_resume", rs["resume_seconds"] * 1e6,
+         f"killed_us={rs['killed_seconds'] * 1e6:.0f};"
+         f"kill_at={rs['kill_at']}/{rs['chunks']};"
+         f"blocked={rs['blocked_equal']};matched={rs['matched_equal']}")
+    rt = res["retry"]
+    _row("resilience_retry", 0.0,
+         f"retries={rt['retries']};escalations={rt['escalations']};"
+         f"pair_cap={rt['start_pair_cap']}->{rt['final_pair_cap']};"
+         f"dropped={rt['dropped_pairs']};overflow={rt['pair_overflow']};"
+         f"blocked={rt['blocked_equal']}")
+    with open("BENCH_resilience.json", "w") as f:
+        json.dump(res, f, indent=2)
+
+
 def kernels(quick: bool):
     import jax
     import jax.numpy as jnp
@@ -256,6 +288,7 @@ TABLES = {
     "balance": balance,
     "stream": stream,
     "serve": serve,
+    "resilience": resilience,
     "kernels": kernels,
     "dedup_e2e": dedup_e2e,
     "roofline": roofline,

@@ -43,16 +43,22 @@ Pieces (each importable on its own):
                            behind a micro-batched queue) whose served pair
                            sets stay bit-identical to a from-scratch
                            ``resolve`` of the live corpus under mutation
+  * repro.resilience       fault tolerance: checkpointed/resumable streaming
+                           (``resolve_stream(checkpoint_dir=...)`` +
+                           ``api.resume``), the ``ERConfig.on_overflow``
+                           cap-escalation retry ladder, and the
+                           deterministic fault-injection harness
 """
 from repro.api.config import ERConfig, SortKeySpec
-from repro.api.facade import default_bounds, link, make_runner, resolve, serve
+from repro.api.facade import (default_bounds, link, make_runner, resolve,
+                              resume, serve)
 from repro.api.linkage import sequential_link_pairs, tag_sources
 from repro.api.results import (BalanceMetrics, BlockingResult, ERMetrics,
                                ERResult, MultiPassResult, PerfStats,
-                               pack_pairs, packed_pairs_from_band,
-                               packed_pairs_from_idx, packed_pairs_from_part,
-                               packed_to_frozenset, pairs_from_band,
-                               unpack_pairs)
+                               ResilienceStats, pack_pairs,
+                               packed_pairs_from_band, packed_pairs_from_idx,
+                               packed_pairs_from_part, packed_to_frozenset,
+                               pairs_from_band, unpack_pairs)
 from repro.api.runners import (PackedOutcome, Runner, RunnerOutcome,
                                SequentialRunner, ShardMapRunner, VmapRunner,
                                shard_input)
@@ -65,20 +71,27 @@ from repro.core.window import (available_band_engines, get_band_engine,
                                register_band_engine)
 
 _SERVE_TYPES = ("ResolutionService", "IncrementalResult", "ServeStats")
+_RESILIENCE_TYPES = ("StreamCheckpoint", "FaultPlan", "InjectedFault",
+                     "CapacityOverflowError")
 
 
 def __getattr__(name):
-    # the serve result types resolve lazily (PEP 562): repro.serve imports
-    # repro.api submodules, so an eager import here would be a cycle
+    # the serve/resilience types resolve lazily (PEP 562): both packages
+    # import repro.api submodules, so an eager import here would be a cycle
     if name in _SERVE_TYPES:
         import repro.serve as _serve
         return getattr(_serve, name)
+    if name in _RESILIENCE_TYPES:
+        import repro.resilience as _resilience
+        return getattr(_resilience, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 __all__ = [
     "ERConfig", "SortKeySpec",
-    "resolve", "link", "serve", "make_runner", "default_bounds",
+    "resolve", "link", "serve", "resume", "make_runner", "default_bounds",
     "ResolutionService", "IncrementalResult", "ServeStats",
+    "ResilienceStats", "StreamCheckpoint", "FaultPlan", "InjectedFault",
+    "CapacityOverflowError",
     "BlockingResult", "ERResult", "ERMetrics", "BalanceMetrics", "PerfStats",
     "MultiPassResult",
     "pairs_from_band",

@@ -22,6 +22,7 @@ PARTITIONERS = ("balanced", "range", "sample",
 BAND_ENGINES = ("scan", "pallas")
 EMIT_MODES = ("band", "pairs")
 SORT_KEY_KINDS = ("identity", "prefix", "word")
+OVERFLOW_POLICIES = ("count", "retry", "raise")
 
 
 @dataclass(frozen=True)
@@ -100,7 +101,11 @@ class ERConfig:
                     the whole band — a finite cap is both the FLOP and the
                     memory lever (DESIGN.md §6 sizing rule).  Overflowing
                     candidates are dropped AND counted (cand_overflow in
-                    results) — the SRP capacity model applied to matching
+                    results) — the SRP capacity model applied to matching.
+                    None (default) -> auto-sized by ``balance.suggest_caps``
+                    from the key profile on the pallas engine (falls back
+                    to 0 where no profile-backed plan exists — raw bounds,
+                    direct runner calls)
       band_interpret  force the Pallas interpreter on/off; None -> auto
                     (native kernel on TPU; off-TPU the cheap stage runs as
                     a band-shaped jnp evaluation — same math, without the
@@ -117,7 +122,29 @@ class ERConfig:
                     buffers; 0 -> (w-1)*M (never overflows).  Overflowing
                     slots are dropped AND counted (pair_overflow in
                     results — blocked pairs CAN be lost here, unlike
-                    cand_cap, so size it >= (w-1)*max_load for parity)
+                    cand_cap, so size it >= (w-1)*max_load for parity).
+                    None (default) -> auto-sized by ``balance.suggest_caps``
+                    under emit="pairs" (the profile band bound, which never
+                    truncates; falls back to 0 without a profile)
+
+    Overflow recovery (repro.resilience — DESIGN.md §11):
+      on_overflow   what a resolve does when a finite capacity actually
+                    overflowed (``overflow``/``cand_overflow``/
+                    ``pair_overflow`` > 0):
+                      "count"  (legacy) keep the truncated result, counters
+                               report the drops
+                      "retry"  re-execute the affected resolve (or the one
+                               overflowing stream chunk) with every
+                               overflowed cap doubled, up to ``retry_limit``
+                               escalations — doubled caps stay on a
+                               power-of-two ladder from the base cap, so
+                               retried shapes still bucket into the
+                               repro.perf executable cache; a ladder that
+                               still overflows raises CapacityOverflowError
+                               (never a silent drop)
+                      "raise"  raise CapacityOverflowError immediately
+      retry_limit   maximum cap-doubling rounds per resolve under
+                    on_overflow="retry"
 
     Execution cache:
       jit_cache     route device runners through the repro.perf executable
@@ -168,12 +195,15 @@ class ERConfig:
 
     band_engine: str = "scan"
     band_block: int = 256
-    cand_cap: int = 0
+    cand_cap: Optional[int] = None
     band_interpret: Optional[bool] = None
 
     emit: str = "band"
-    pair_cap: int = 0
+    pair_cap: Optional[int] = None
     jit_cache: bool = True
+
+    on_overflow: str = "count"
+    retry_limit: int = 3
 
     runner: str = "vmap"
     num_shards: int = 8
@@ -210,15 +240,22 @@ class ERConfig:
                              f"choose from {BAND_ENGINES}")
         if self.band_block < 1:
             raise ValueError(f"band_block must be >= 1, got {self.band_block}")
-        if self.cand_cap < 0:
-            raise ValueError(f"cand_cap must be >= 0 (0 = unbounded), "
-                             f"got {self.cand_cap}")
+        if self.cand_cap is not None and self.cand_cap < 0:
+            raise ValueError(f"cand_cap must be >= 0 (0 = unbounded, "
+                             f"None = auto), got {self.cand_cap}")
         if self.emit not in EMIT_MODES:
             raise ValueError(f"unknown emit mode {self.emit!r}; choose from "
                              f"{EMIT_MODES}")
-        if self.pair_cap < 0:
+        if self.pair_cap is not None and self.pair_cap < 0:
             raise ValueError(f"pair_cap must be >= 0 (0 = full band, never "
-                             f"overflows), got {self.pair_cap}")
+                             f"overflows; None = auto), got {self.pair_cap}")
+        if self.on_overflow not in OVERFLOW_POLICIES:
+            raise ValueError(f"unknown on_overflow policy "
+                             f"{self.on_overflow!r}; choose from "
+                             f"{OVERFLOW_POLICIES}")
+        if self.retry_limit < 0:
+            raise ValueError(f"retry_limit must be >= 0, "
+                             f"got {self.retry_limit}")
         if self.emit == "pairs" and self.return_scores:
             raise ValueError(
                 "emit='pairs' transfers packed pair indices instead of "
@@ -249,7 +286,12 @@ class ERConfig:
         jit_cache, passes — each blocking pass reruns the same program on
         re-derived key values) are deliberately excluded so e.g. switching
         partitioners reuses the compiled executable (boundaries are traced
-        arguments)."""
+        arguments).  ``on_overflow``/``retry_limit`` are host-side recovery
+        policy and excluded too: a retry re-executes under a cfg whose
+        DOUBLED caps fingerprint to their own (bucketed) entries.  Auto
+        (None) caps are resolved to concrete ints by the facade/stream
+        before any runner call, so a fingerprint with a None cap only
+        arises from direct raw-runner use (where None means 0)."""
         return ("ERConfig", self.window, self.variant, self.hops,
                 self.cap_factor, self.matcher, self.return_scores,
                 self.band_engine, self.band_block, self.cand_cap,

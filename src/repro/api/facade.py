@@ -14,6 +14,8 @@ ShardPlan) always win.
 """
 from __future__ import annotations
 
+from dataclasses import replace as _replace
+
 import numpy as np
 
 from repro import balance as B
@@ -26,6 +28,7 @@ from repro.api.runners import (Runner, SequentialRunner, ShardMapRunner,
 from repro.core import keys as K
 from repro.core import sn
 from repro.perf import cache as PC
+from repro.resilience import retry as RZ
 
 
 def make_runner(cfg: ERConfig, *, mesh=None, axis: str = "data") -> Runner:
@@ -132,12 +135,29 @@ def resolve(ents: dict, cfg: ERConfig, *, bounds=None, mesh=None,
             raise ValueError(
                 f"bounds define {plan.num_shards} partitions but only "
                 f"{n_valid} valid entities exist; use fewer partitions")
+    # unset (None) caps resolve from the plan's profiled loads when the
+    # partitioner is profile-backed; legacy/raw-bounds plans fall back to
+    # the historical unbounded semantics (DESIGN.md §11)
+    cfg, auto_caps = RZ.autosize_caps(cfg, plan=plan)
     cache = PC.executable_cache()
     before = cache.stats.snapshot()
-    out = runner.resolve(ents, plan, cfg)
+
+    def _attempt(c: ERConfig, attempt: int):
+        # retries lift the plan's EXACT cap_link: it was sized for the
+        # planned loads the overflow just disproved, and cfg.cap_factor
+        # (doubled by the ladder) takes over as the shuffle capacity
+        p = plan if attempt == 0 or plan.cap_link is None \
+            else _replace(plan, cap_link=None)
+        return runner.resolve(ents, p, c)
+
+    out, run_cfg, retries, escalations = RZ.run_with_recovery(_attempt, cfg)
     dh, dm, dt = cache.stats.delta(before)
     perf = PerfStats(cache_hits=dh, cache_misses=dm, traces=dt,
                      cache_entries=len(cache))
+    resilience = RZ.ResilienceStats(
+        policy=cfg.on_overflow, retries=retries, escalations=escalations,
+        cand_cap=run_cfg.cand_cap or 0, pair_cap=run_cfg.pair_cap or 0,
+        auto_caps=auto_caps)
 
     blocking = BlockingResult(pairs=out.blocked, load=out.load,
                               overflow=out.overflow, variant=cfg.variant,
@@ -161,9 +181,9 @@ def resolve(ents: dict, cfg: ERConfig, *, bounds=None, mesh=None,
         metrics = replace(
             compute_metrics(out.blocked, oracle,
                             _total_comparisons(ents, cfg)),
-            balance=balance)
+            balance=balance, resilience=resilience)
     return ERResult(blocking=blocking, matches=out.matched, metrics=metrics,
-                    balance=balance, perf=perf)
+                    balance=balance, perf=perf, resilience=resilience)
 
 
 def _rekeyed(ents: dict, spec) -> dict:
@@ -231,10 +251,18 @@ def _resolve_multipass(ents: dict, cfg: ERConfig, *, bounds, mesh,
     if cfg.compute_metrics:
         metrics = compute_metrics(blocking.pairs, union_oracle,
                                   _total_comparisons(ents, cfg))
+    rz = [r.resilience for r in results if r.resilience is not None]
+    resilience = None if not rz else RZ.ResilienceStats(
+        policy=rz[0].policy,
+        retries=sum(x.retries for x in rz),
+        escalations=sum(x.escalations for x in rz),
+        cand_cap=max(x.cand_cap for x in rz),
+        pair_cap=max(x.pair_cap for x in rz),
+        auto_caps=any(x.auto_caps for x in rz))
     return MultiPassResult(passes=results,
                            pass_names=tuple(p.name for p in cfg.passes),
                            blocking=blocking, matches=matches,
-                           metrics=metrics)
+                           metrics=metrics, resilience=resilience)
 
 
 def _untag_blocking(b: BlockingResult, offset: int) -> BlockingResult:
@@ -260,16 +288,18 @@ def link(lhs: dict, rhs: dict, cfg: ERConfig, *, bounds=None, mesh=None,
         passes = tuple(
             ERResult(blocking=_untag_blocking(r.blocking, offset),
                      matches=frozenset(LK.untag_pairs(r.matches, offset)),
-                     metrics=r.metrics, balance=r.balance, perf=r.perf)
+                     metrics=r.metrics, balance=r.balance, perf=r.perf,
+                     resilience=r.resilience)
             for r in res.passes)
         return MultiPassResult(
             passes=passes, pass_names=res.pass_names,
             blocking=_untag_blocking(res.blocking, offset),
             matches=frozenset(LK.untag_pairs(res.matches, offset)),
-            metrics=res.metrics)
+            metrics=res.metrics, resilience=res.resilience)
     return ERResult(blocking=_untag_blocking(res.blocking, offset),
                     matches=frozenset(LK.untag_pairs(res.matches, offset)),
-                    metrics=res.metrics, balance=res.balance, perf=res.perf)
+                    metrics=res.metrics, balance=res.balance, perf=res.perf,
+                    resilience=res.resilience)
 
 
 def serve(cfg: ERConfig, *, initial=None, **kwargs):
@@ -282,3 +312,20 @@ def serve(cfg: ERConfig, *, initial=None, **kwargs):
     forwarded to the service constructor."""
     from repro.serve import ResolutionService
     return ResolutionService(cfg, initial=initial, **kwargs)
+
+
+def resume(checkpoint_dir: str, *, chunks=None, cfg: ERConfig = None,
+           mesh=None, axis: str = "data"):
+    """Resume a checkpointed ``stream.resolve_stream(checkpoint_dir=...)``
+    run killed mid-flight (DESIGN.md §11): continues at the last committed
+    chunk and returns the same ``StreamResult`` — bit-identical pair union
+    — an uninterrupted run would have produced.
+
+    The config is rebuilt from the checkpoint manifest; pass ``cfg`` only
+    when the original run used a non-default matcher (it is validated
+    against the stored fingerprint).  ``chunks`` re-supplies the original
+    deterministic chunk iterator and is required only when the run died
+    during ingest."""
+    from repro.resilience.checkpoint import resume_stream
+    return resume_stream(checkpoint_dir, chunks=chunks, cfg=cfg, mesh=mesh,
+                         axis=axis)

@@ -17,6 +17,8 @@ from typing import FrozenSet, NamedTuple, Optional, Set, Tuple
 
 import numpy as np
 
+from repro.resilience.retry import ResilienceStats
+
 Pair = Tuple[int, int]
 
 PACKED_DTYPE = np.uint64
@@ -128,12 +130,15 @@ class ERMetrics:
     reduction_ratio     1 - |blocked| / |all comparable pairs|
     pairs_completeness  |blocked ∩ oracle| / |oracle|
     balance             planned-vs-realized shard load (profile-backed runs)
+    resilience          overflow-recovery telemetry (retries / escalations /
+                        final caps — DESIGN.md §11)
     """
     reduction_ratio: float
     pairs_completeness: float
     oracle_pairs: int
     total_comparisons: int
     balance: Optional[BalanceMetrics] = None
+    resilience: Optional[ResilienceStats] = None
 
 
 @dataclass(frozen=True)
@@ -180,6 +185,9 @@ class ERResult:
     balance: Optional[BalanceMetrics] = None
     perf: Optional[PerfStats] = None  # executable-cache telemetry for this
     #                                   call (hits / misses / traces)
+    resilience: Optional[ResilienceStats] = None  # overflow-recovery
+    #                                   telemetry (retries / escalations /
+    #                                   final caps — DESIGN.md §11)
 
     @property
     def pairs(self) -> FrozenSet[Pair]:
@@ -206,6 +214,7 @@ class MultiPassResult:
     blocking: BlockingResult
     matches: FrozenSet[Pair]
     metrics: Optional[ERMetrics] = None
+    resilience: Optional[ResilienceStats] = None  # summed across passes
 
     @property
     def pairs(self) -> FrozenSet[Pair]:

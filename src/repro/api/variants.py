@@ -115,7 +115,8 @@ class VariantBase:
         if getattr(cfg, "emit", "band") == "pairs":
             m = e["valid"].shape[0]
             full = (cfg.window - 1) * m
-            cap = min(cfg.pair_cap, full) if cfg.pair_cap > 0 else full
+            pair_cap = cfg.pair_cap or 0   # None (unresolved auto) -> full
+            cap = min(pair_cap, full) if pair_cap > 0 else full
             bound = engine.match_bound(e, cfg)     # match band is sparser:
             caps = {"mask": cap,                   # engines with a provable
                     "match": cap if bound is None  # bound (pallas cand_cap)

@@ -420,9 +420,10 @@ class PallasBandEngine(BandEngine):
         finite cand_cap bounds the match band's True count exactly — the
         emitted match index buffer never needs more slots (unless the
         cascade falls back to the scan oracle, where no such bound holds)."""
-        if cfg.cand_cap > 0 and \
+        cand_cap = cfg.cand_cap or 0   # None (unresolved auto) acts like 0
+        if cand_cap > 0 and \
                 split_cascade(cfg.matcher, ents["payload"]) is not None:
-            return cfg.cand_cap
+            return cand_cap
         return None
 
     def band(self, ents: dict, cfg, *, halo_len: int, mode: str) -> dict:
@@ -457,7 +458,8 @@ class PallasBandEngine(BandEngine):
             cheap_rows = cheap.T
         gate = (cheap_rows >= split.tau_partial) & mask     # (w-1, M)
 
-        cap = cfg.cand_cap if cfg.cand_cap > 0 else (w - 1) * m
+        cand_cap = cfg.cand_cap or 0   # None (unresolved auto) acts like 0
+        cap = cand_cap if cand_cap > 0 else (w - 1) * m
         cand_i, cand_d, cand_valid, n_cand, overflow = \
             compact_candidates(gate, cap)
         score = score_candidates(ents, cand_i, cand_d, cand_valid,

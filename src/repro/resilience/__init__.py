@@ -1,0 +1,45 @@
+"""``repro.resilience`` — fault tolerance for long-running resolution.
+
+The paper's premise is cloud MapReduce, where worker failure is routine and
+the framework re-executes lost tasks transparently (§2).  This package is
+that guarantee for the repro: a killed run loses at most one chunk of work,
+and a capacity overflow is RECOVERED instead of silently counted.
+
+Three legs (DESIGN.md §11):
+
+  * checkpoint    ``StreamCheckpoint`` — the versioned on-disk manifest
+                  behind ``resolve_stream(checkpoint_dir=...)``: ingested
+                  chunks, sorted runs, the merged ``KeyProfile``, the w-1
+                  seam halo, and a per-chunk packed-pair spool, all written
+                  crash-atomically after every completed chunk.
+                  ``resume_stream`` (== ``api.resume``) picks a killed run
+                  up at the last committed chunk; the resumed pair union is
+                  bit-identical to an uninterrupted run (invariant 11).
+  * retry         the ``ERConfig.on_overflow`` escalation ladder: a resolve
+                  (or single stream chunk) whose finite caps overflowed is
+                  re-executed with every overflowed cap doubled, up to
+                  ``retry_limit`` rounds — power-of-two caps keep retried
+                  shapes inside the ``repro.perf`` executable cache.
+                  ``autosize_caps`` fills unset (None) caps from
+                  ``balance.suggest_caps`` on the key profile.
+  * faults        the deterministic ``FaultPlan`` injection harness the
+                  kill/resume parity tests drive: crash-after-chunk-k,
+                  crash-between-spool-and-commit, and a flaky chunk
+                  iterator that dies mid-ingest.
+
+Serve-side durability (``SortedIndex.snapshot``/``restore``,
+``ResolutionService.snapshot``/``restore``) lives in ``repro.serve`` and is
+documented there.
+"""
+from repro.resilience.checkpoint import StreamCheckpoint, resume_stream
+from repro.resilience.faults import (FaultPlan, InjectedFault, flaky_chunks,
+                                     micro_caps)
+from repro.resilience.retry import (CapacityOverflowError, ResilienceStats,
+                                    autosize_caps, run_with_recovery)
+
+__all__ = [
+    "StreamCheckpoint", "resume_stream",
+    "FaultPlan", "InjectedFault", "flaky_chunks", "micro_caps",
+    "CapacityOverflowError", "ResilienceStats", "autosize_caps",
+    "run_with_recovery",
+]

@@ -1,0 +1,83 @@
+"""Deterministic fault injection — the harness behind kill/resume tests.
+
+Real preemption is nondeterministic; the parity tests need the opposite: a
+crash at an EXACT point in the pipeline, repeatable for every chunk index.
+``FaultPlan`` injects those crashes from inside ``resolve_stream``'s chunk
+loop, and ``flaky_chunks`` wraps an ingest iterator so it dies mid-ingest —
+together they cover every durability seam the checkpoint protocol has:
+
+  * ``crash_after_chunk=k``    raise AFTER chunk k's checkpoint committed
+                               (clean kill: resume continues at chunk k+1)
+  * ``crash_before_commit=k``  raise after chunk k's pair spool was written
+                               but BEFORE the manifest committed it (torn
+                               kill: resume must redo chunk k, atomically
+                               overwriting the orphaned spool file)
+  * ``flaky_chunks(it, fail_after=j)``  the ingest iterator raises after
+                               yielding j chunks (resume re-supplies the
+                               iterator and skips the j committed chunks)
+
+Overflow-forcing micro-caps are just configuration — build them with
+``micro_caps``.  Injected crashes raise ``InjectedFault`` so tests can
+catch exactly the planned failure and nothing else.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterable, Iterator, Optional
+
+
+class InjectedFault(RuntimeError):
+    """A crash raised by a FaultPlan / flaky iterator (never by real code
+    paths) — tests catch this exact type so an unplanned error still
+    fails them loudly."""
+
+
+@dataclass(frozen=True)
+class FaultPlan:
+    """Deterministic crash points for one streaming run (see module doc).
+
+    Chunk indices are 0-based within the streaming pass named ``label``
+    (None = any pass — single-pass runs have exactly one, labelled "key").
+    A plan is consulted, never mutated: the resumed run simply passes no
+    plan (or a different one) instead."""
+    crash_after_chunk: Optional[int] = None
+    crash_before_commit: Optional[int] = None
+    label: Optional[str] = None
+
+    def _matches(self, label: str) -> bool:
+        return self.label is None or self.label == label
+
+    def before_commit(self, label: str, chunk: int) -> None:
+        """Called between a chunk's pair-spool write and its manifest
+        commit — the torn-write injection point."""
+        if self._matches(label) and self.crash_before_commit == chunk:
+            raise InjectedFault(
+                f"injected crash before committing chunk {chunk} "
+                f"(pass {label!r}): spool written, manifest not updated")
+
+    def after_commit(self, label: str, chunk: int) -> None:
+        """Called after a chunk's checkpoint fully committed — the clean
+        kill injection point."""
+        if self._matches(label) and self.crash_after_chunk == chunk:
+            raise InjectedFault(
+                f"injected crash after committing chunk {chunk} "
+                f"(pass {label!r})")
+
+
+def flaky_chunks(chunks: Iterable[dict], fail_after: int) -> Iterator[dict]:
+    """Wrap an ingest iterator to raise ``InjectedFault`` after yielding
+    ``fail_after`` chunks — the mid-ingest kill.  The resumed run gets a
+    FRESH (deterministic) iterator; the checkpoint skips the chunks it
+    already committed."""
+    for i, c in enumerate(chunks):
+        if i == fail_after:
+            raise InjectedFault(
+                f"injected mid-ingest failure after {fail_after} chunks")
+        yield c
+
+
+def micro_caps(cfg, *, cand_cap: int = 2, pair_cap: int = 2):
+    """An overflow-forcing config: absurdly small finite caps that make
+    every realistic chunk overflow — the fixture the zero-dropped-pairs
+    retry tests (and BENCH_resilience's retry column) run under."""
+    return cfg.with_(cand_cap=cand_cap, pair_cap=pair_cap)

@@ -31,6 +31,8 @@ per micro-batch, not a re-sort.
 """
 from __future__ import annotations
 
+import json
+import os
 from typing import Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
@@ -38,7 +40,9 @@ import numpy as np
 from repro import balance as B
 from repro.core import entities as E
 from repro.stream.external_sort import merged_blocks, rechunk
-from repro.stream.store import ChunkStore
+from repro.stream.store import ChunkStore, atomic_write_json
+
+_INDEX_MANIFEST = "INDEX.json"
 
 _EID_MASK = np.int64(0xFFFFFFFF)
 
@@ -208,6 +212,54 @@ class SortedIndex:
         (key, eid) order as host blocks (``external_sort.merged_blocks``
         over the tombstone-masked runs)."""
         return merged_blocks(_MaskedRuns(self._runs, self._live), block)
+
+    # -- durability ----------------------------------------------------------
+
+    def snapshot(self, snapshot_dir: str) -> dict:
+        """Persist the LIVE corpus to ``snapshot_dir``: the tombstone-masked
+        galloping merge (the compaction view) re-blocked into sorted
+        ``seg%06d.npz`` segments plus an ``INDEX.json`` manifest, every file
+        written atomically with the manifest LAST — a crash mid-snapshot
+        leaves the previous snapshot (or no manifest), never a torn one.
+        Tombstoned rows are not persisted; a restored index starts
+        compacted.  Returns the manifest dict."""
+        os.makedirs(snapshot_dir, exist_ok=True)
+        store = ChunkStore(snapshot_dir, prefix="seg")
+        for chunk in rechunk(self.scan_live(self.merge_block),
+                             self.segment_rows):
+            store.append(chunk)
+        manifest = {"version": 1, "window": self.window,
+                    "segment_rows": self.segment_rows,
+                    "segments": len(store), "n_live": self.n_live}
+        atomic_write_json(os.path.join(snapshot_dir, _INDEX_MANIFEST),
+                          manifest)
+        return manifest
+
+    @classmethod
+    def restore(cls, snapshot_dir: str, *, spool_dir: Optional[str] = None,
+                **kwargs) -> "SortedIndex":
+        """Rebuild an index from a ``snapshot`` directory.  Segments replay
+        through the ordinary ``insert`` path, and ``KeyProfile.merge`` is
+        exact, so the restored profile — and therefore every plan and
+        served pair set derived from it — is identical to the live index's
+        at snapshot time.  ``spool_dir``/remaining kwargs configure the NEW
+        index (the snapshot dir itself is never written to)."""
+        mpath = os.path.join(snapshot_dir, _INDEX_MANIFEST)
+        if not os.path.exists(mpath):
+            raise FileNotFoundError(
+                f"no index snapshot manifest at {mpath!r}")
+        with open(mpath) as f:
+            manifest = json.load(f)
+        if manifest.get("version") != 1:
+            raise ValueError(f"unsupported index snapshot version "
+                             f"{manifest.get('version')!r}")
+        store = ChunkStore.attach(snapshot_dir, "seg",
+                                  count=manifest["segments"])
+        idx = cls(manifest["window"], spool_dir=spool_dir,
+                  segment_rows=manifest["segment_rows"], **kwargs)
+        for chunk in store:
+            idx.insert(chunk)
+        return idx
 
     # -- compaction ----------------------------------------------------------
 

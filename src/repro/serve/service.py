@@ -26,6 +26,8 @@ lifetime: a pair that is retired and later re-created keeps its id.
 """
 from __future__ import annotations
 
+import json
+import os
 import queue
 import threading
 import time
@@ -41,6 +43,9 @@ from repro.core import entities as E
 from repro.perf import cache as PC
 from repro.serve.delta import DeltaMatcher, srp_straddle_packed
 from repro.serve.index import SortedIndex
+from repro.stream.store import atomic_savez, atomic_write_json
+
+_SERVICE_MANIFEST = "SERVICE.json"
 
 Pair = Tuple[int, int]
 _EMPTY = np.empty((0,), RES.PACKED_DTYPE)
@@ -56,7 +61,10 @@ class ServeStats(NamedTuple):
     shard_cap) delta-call buckets seen, the quantity that must stay small
     for that to hold.  ``batch_fill`` is the mean coalesced batch size
     over ``max_batch``; ``p50_ms``/``p95_ms`` are submit-to-result
-    latencies over a sliding window."""
+    latencies over a sliding window.  ``failure`` is None while the
+    service is healthy; after an unexpected worker error it carries that
+    error's repr (the service refuses further submissions — DESIGN.md
+    §11)."""
     requests: int
     batches: int
     steady_batches: int
@@ -76,6 +84,7 @@ class ServeStats(NamedTuple):
     pairs: int
     matches: int
     shapes: Tuple[Tuple[int, int], ...]
+    failure: Optional[str] = None
 
 
 class IncrementalResult(NamedTuple):
@@ -133,6 +142,8 @@ class ResolutionService:
                  shard_buckets=(2, 4, 8), cap_floor: int = 64):
         self.cfg = cfg
         self._boundary_complete = get_variant(cfg.variant).boundary_complete
+        self._shard_buckets = shard_buckets     # kept for restore()
+        self._cap_floor = cap_floor
         self.index = SortedIndex(cfg.window, spool_dir=spool_dir,
                                  segment_rows=segment_rows,
                                  max_runs=max_runs,
@@ -159,6 +170,7 @@ class ResolutionService:
         self._q: "queue.Queue" = queue.Queue(maxsize=queue_cap)
         self._worker: Optional[threading.Thread] = None
         self._closed = False
+        self._failure: Optional[BaseException] = None
         if start:
             self._worker = threading.Thread(target=self._run,
                                             name="resolution-serve",
@@ -192,6 +204,10 @@ class ResolutionService:
         return self.submit_delete(eids).result()
 
     def _submit(self, req: _Request) -> "Future[IncrementalResult]":
+        if self._failure is not None:
+            raise RuntimeError(
+                "service failed and no longer accepts requests"
+            ) from self._failure
         if self._closed:
             raise RuntimeError("service is closed")
         if self._worker is None:
@@ -232,17 +248,45 @@ class ResolutionService:
                 group.append(nxt)
                 n += nxt.n
             self._process(group)
+            if self._failure is not None:
+                running = False        # dead worker: stop consuming
         if pending is not None and pending is not _STOP:
-            self._process([pending])
+            if self._failure is not None:
+                pending.future.set_exception(self._failure)
+            else:
+                self._process([pending])
 
     def _process(self, group) -> None:
         try:
             result = self._apply_batch(group)
-            for r in group:
-                r.future.set_result(result)
-        except BaseException as exc:  # noqa: BLE001 — forwarded to callers
+        except ValueError as exc:
+            # request-level rejection (bad input: eid collisions, unknown
+            # deletes, ...): the batch's callers get the error, the
+            # service state is untouched and keeps serving
             for r in group:
                 r.future.set_exception(exc)
+        except BaseException as exc:  # noqa: BLE001 — service-level failure
+            # anything else means the worker can no longer guarantee its
+            # parity invariant: mark the service failed (never die
+            # silently), fail this batch AND everything still queued with
+            # the ORIGINAL error, and refuse new submissions
+            self._fail(exc, group)
+        else:
+            for r in group:
+                r.future.set_result(result)
+
+    def _fail(self, exc: BaseException, group) -> None:
+        self._failure = exc
+        self._closed = True
+        for r in group:
+            r.future.set_exception(exc)
+        while True:              # queued requests must not hang forever
+            try:
+                nxt = self._q.get_nowait()
+            except queue.Empty:
+                break
+            if nxt is not _STOP:
+                nxt.future.set_exception(exc)
 
     def _apply_batch(self, group) -> IncrementalResult:
         kind = group[0].kind
@@ -352,21 +396,101 @@ class ResolutionService:
             compactions=self.index.compactions,
             pairs=int(self._served_b.shape[0]),
             matches=int(self._served_m.shape[0]),
-            shapes=tuple(sorted(self._shapes)))
+            shapes=tuple(sorted(self._shapes)),
+            failure=None if self._failure is None else repr(self._failure))
 
     def stats(self) -> ServeStats:
         """Current telemetry snapshot."""
         with self._lock:
             return self._stats_locked()
 
+    # -- durability ----------------------------------------------------------
+
+    def snapshot(self, snapshot_dir: str) -> None:
+        """Persist the full serving state to ``snapshot_dir`` (DESIGN.md
+        §11): the live index segments (``SortedIndex.snapshot``), the
+        maintained + served packed pair sets, the stable pair-id table,
+        and a manifest carrying the config fingerprint.  All writes are
+        atomic with the manifest last; a restored service serves the
+        IDENTICAL pair set and continues under the same ids."""
+        with self._lock:
+            self.index.snapshot(snapshot_dir)
+            packed = np.fromiter(self._pair_ids.keys(), np.uint64,
+                                 len(self._pair_ids))
+            ids = np.fromiter(self._pair_ids.values(), np.int64,
+                              len(self._pair_ids))
+            atomic_savez(os.path.join(snapshot_dir, "pairs.npz"),
+                         blocked=self._blocked, matched=self._matched,
+                         served_b=self._served_b, served_m=self._served_m,
+                         pair_packed=packed, pair_id=ids)
+            atomic_write_json(
+                os.path.join(snapshot_dir, _SERVICE_MANIFEST),
+                {"version": 1,
+                 "fingerprint": repr(self.cfg.static_fingerprint()),
+                 "num_shards": self.cfg.num_shards})
+
+    @classmethod
+    def restore(cls, snapshot_dir: str, cfg,
+                **kwargs) -> "ResolutionService":
+        """Rebuild a service from a ``snapshot`` directory.  ``cfg`` must
+        be the original config (validated against the stored fingerprint —
+        the served set depends on it); remaining kwargs configure the new
+        service exactly like the constructor.  The restored service serves
+        the same pairs/matches under the same stable pair ids, and further
+        mutations stay in parity with an uninterrupted service."""
+        mpath = os.path.join(snapshot_dir, _SERVICE_MANIFEST)
+        if not os.path.exists(mpath):
+            raise FileNotFoundError(
+                f"no service snapshot manifest at {mpath!r}")
+        with open(mpath) as f:
+            manifest = json.load(f)
+        fp = repr(cfg.static_fingerprint())
+        if fp != manifest["fingerprint"] \
+                or cfg.num_shards != manifest["num_shards"]:
+            raise ValueError(
+                f"config does not match the snapshot at {snapshot_dir!r} "
+                f"(the served pair set depends on it); restore with the "
+                f"original configuration")
+        svc = cls(cfg, **kwargs)
+        with svc._lock:
+            old = svc.index
+            svc.index = SortedIndex.restore(
+                snapshot_dir, spool_dir=old.spool_dir,
+                max_runs=old.max_runs,
+                max_tombstone_frac=old.max_tombstone_frac,
+                merge_block=old.merge_block)
+            svc._delta = DeltaMatcher(cfg, svc.index,
+                                      shard_buckets=svc._shard_buckets,
+                                      cap_floor=svc._cap_floor)
+            with np.load(os.path.join(snapshot_dir, "pairs.npz"),
+                         allow_pickle=False) as z:
+                svc._blocked, svc._matched = z["blocked"], z["matched"]
+                svc._served_b, svc._served_m = z["served_b"], z["served_m"]
+                svc._pair_ids = dict(zip(z["pair_packed"].tolist(),
+                                         z["pair_id"].tolist()))
+        return svc
+
     # -- lifecycle -----------------------------------------------------------
 
-    def close(self) -> None:
-        """Drain the queue, stop the worker, and refuse new submissions."""
+    def close(self, drain: bool = True) -> None:
+        """Stop the worker and refuse new submissions.  ``drain=True``
+        (default) processes everything already queued first — every
+        previously returned future completes normally; ``drain=False``
+        fails queued requests immediately with a RuntimeError instead."""
         if self._closed:
             return
         self._closed = True
         if self._worker is not None:
+            if not drain:
+                err = RuntimeError("service closed with drain=False before "
+                                   "this request was processed")
+                while True:
+                    try:
+                        nxt = self._q.get_nowait()
+                    except queue.Empty:
+                        break
+                    if nxt is not _STOP:
+                        nxt.future.set_exception(err)
             self._q.put(_STOP)
             self._worker.join()
             self._worker = None

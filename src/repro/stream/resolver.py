@@ -57,6 +57,10 @@ from repro.api.variants import get_variant
 from repro.core import entities as E
 from repro.core import sn
 from repro.perf import cache as PC
+# the leaf retry module only (never the package __init__): repro.resilience
+# imports checkpoint -> stream.store -> this module, so importing the
+# package here would re-enter its half-executed __init__
+from repro.resilience import retry as RZ
 from repro.stream.external_sort import merged_blocks, rechunk
 from repro.stream.store import ChunkStore
 
@@ -120,6 +124,10 @@ class StreamResult:
     metrics: Optional[ERMetrics] = None
     passes: Tuple["StreamResult", ...] = ()
     pass_names: Tuple[str, ...] = ()
+    # overflow-recovery telemetry (DESIGN.md §11): retry/escalation counts
+    # and the caps the final executions ran under; multi-pass unions sum
+    # the counters across passes
+    resilience: Optional[RZ.ResilienceStats] = None
 
     @property
     def pairs(self) -> FrozenSet[Pair]:
@@ -178,14 +186,17 @@ def _host_pad(ents: dict, cap: int) -> dict:
 
 
 def _sorted_runs(raw: ChunkStore, spec, window: int,
-                 spool_dir: Optional[str], label: str):
+                 spool_dir: Optional[str], label: str, *,
+                 runs: Optional[ChunkStore] = None):
     """Phase 1 of a pass: device-sort every raw chunk by the pass's derived
     key and fold each chunk's key distribution into ONE merged profile
     (``KeyProfile.merge``) — planning sees the whole corpus without ever
-    holding it.  Returns (runs store, merged profile)."""
+    holding it.  Returns (runs store, merged profile); ``runs`` lets the
+    checkpoint path supply its own (durable, pre-swept) store."""
     from repro.core import keys as K
-    runs = ChunkStore(spool_dir and f"{spool_dir}/runs-{label}",
-                      prefix="run")
+    if runs is None:
+        runs = ChunkStore(spool_dir and f"{spool_dir}/runs-{label}",
+                          prefix="run")
     profile = B.KeyProfile.empty(window)
     for h in raw:
         dev = E.make_entities(h["key"], h["eid"], payload=h["payload"],
@@ -234,13 +245,30 @@ def _chunk_plan(cfg: ERConfig, variant, gplan: B.ShardPlan, dev: dict,
 
 def _stream_pass(raw: ChunkStore, cfg: ERConfig, spec, chunk_size: int,
                  runner, spool_dir: Optional[str], label: str,
-                 total_comparisons: int):
+                 total_comparisons: int, *, ckpt=None, fault=None):
     """Run ONE full streaming pass (sort → merge → chunked resolve) and
     return (StreamResult, oracle_pair_set | None) — the oracle set is kept
-    so multi-pass callers can union per-pass oracles for union metrics."""
+    so multi-pass callers can union per-pass oracles for union metrics.
+
+    With ``ckpt`` (a ``resilience.StreamCheckpoint``) the pass is durable:
+    sorted runs + profile commit once, then every resolved chunk commits
+    its pair spool, seam halo, and accumulators — and a pass whose
+    manifest already records progress FAST-FORWARDS: committed chunks are
+    skipped in the (deterministic) merged stream, their pairs reloaded
+    from the spool, the carry/rank/counters restored.  ``fault`` is the
+    test-only ``FaultPlan`` crash injector."""
     w, r = cfg.window, runner.shards
     variant = get_variant(cfg.variant)
-    runs, profile = _sorted_runs(raw, spec, w, spool_dir, label)
+    if ckpt is not None:
+        runs, sorted_done = ckpt.runs_store(label)
+        if sorted_done:
+            profile = ckpt.load_profile(label)
+        else:
+            runs, profile = _sorted_runs(raw, spec, w, None, label,
+                                         runs=runs)
+            ckpt.commit_sorted(label, runs, profile)
+    else:
+        runs, profile = _sorted_runs(raw, spec, w, spool_dir, label)
     gplan = B.plan_from_profile(profile, cfg.partitioner, r)
     # config-level feasibility is judged ONCE, against the global plan —
     # exactly what the monolithic facade would reject (halo-truncating
@@ -249,6 +277,11 @@ def _stream_pass(raw: ChunkStore, cfg: ERConfig, spec, chunk_size: int,
     B.validate_plan(gplan, cfg, profile.n)
 
     combined_cap = (w - 1) + chunk_size
+    # unset (None) caps resolve from the merged profile's planned loads —
+    # floored at the combined chunk width, since a degenerate (collapsed)
+    # chunk puts the whole [halo | chunk] window on one shard
+    cfg, auto_caps = RZ.autosize_caps(cfg, plan=gplan, profile=profile,
+                                      r=r, floor_load=combined_cap)
     cache = PC.executable_cache()
     blocked_parts, matched_parts = [], []
     load_max = np.zeros(r, np.int64)
@@ -256,12 +289,46 @@ def _stream_pass(raw: ChunkStore, cfg: ERConfig, spec, chunk_size: int,
     overflow = cand_overflow = matcher_evals = pair_overflow = 0
     chunks = steady = degenerate = carry_total = 0
     hits = misses = traces = 0
+    retries = escalations = 0
     device_bytes = 0
     oracle: Optional[Set[Pair]] = set() if cfg.compute_metrics else None
 
     carry: Optional[dict] = None
     rank_offset = 0
+    completed = 0
+    state = ckpt.pass_state(label) if ckpt is not None else None
+    if state is not None and state["completed_chunks"] > 0:
+        completed = state["completed_chunks"]
+        for i in range(completed):
+            bl, ma = ckpt.load_pairs(label, i)
+            blocked_parts.append(bl)
+            matched_parts.append(ma)
+        carry = ckpt.load_carry(label)
+        rank_offset = state["rank_offset"]
+        chunks, carry_total = state["chunks"], state["carry_total"]
+        degenerate, steady = state["degenerate"], state["steady"]
+        hits, misses = state["hits"], state["misses"]
+        traces = state["traces"]
+        overflow = state["overflow"]
+        cand_overflow = state["cand_overflow"]
+        matcher_evals = state["matcher_evals"]
+        pair_overflow = state["pair_overflow"]
+        retries, escalations = state["retries"], state["escalations"]
+        device_bytes = state["device_bytes"]
+        if state["load_max"]:
+            load_max = np.asarray(state["load_max"], np.int64)
+        if state["cand_max"]:
+            cand_max = np.asarray(state["cand_max"], np.int64)
+
+    # the ladder's escalated caps are STICKY across chunks: once one chunk
+    # forced a doubling, later chunks start at the doubled (cache-warm)
+    # shape instead of re-climbing the ladder per chunk
+    run_cfg = cfg
+    ci = -1
     for native in rechunk(merged_blocks(runs, chunk_size), chunk_size):
+        ci += 1
+        if ci < completed:
+            continue   # fast-forward: committed by a previous (killed) run
         n_nat = int(native["key"].shape[0])
         combined = native if carry is None else \
             E.host_concat([carry, native])
@@ -276,7 +343,9 @@ def _stream_pass(raw: ChunkStore, cfg: ERConfig, spec, chunk_size: int,
         plan, degen = _chunk_plan(cfg, variant, gplan, dev, padded, ranks, r)
 
         before = cache.stats.snapshot()
-        po = runner.resolve_packed(dev, plan, cfg)
+        po, run_cfg, rt, esc = RZ.run_with_recovery(
+            lambda c, attempt: runner.resolve_packed(dev, plan, c), run_cfg)
+        retries, escalations = retries + rt, escalations + esc
         dh, dm, dt = cache.stats.delta(before)
         hits, misses, traces = hits + dh, misses + dm, traces + dt
         steady += int(dh > 0 and dm == 0 and dt == 0)
@@ -314,6 +383,26 @@ def _stream_pass(raw: ChunkStore, cfg: ERConfig, spec, chunk_size: int,
         carry = E.host_take(combined, slice(n_comb - keep, n_comb))
         rank_offset += n_nat
 
+        if ckpt is not None:
+            # commit protocol (checkpoint module doc): pair spool, then
+            # seam halo + manifest — the manifest write is the commit point
+            ckpt.spool_chunk(label, ci, po.blocked, po.matched)
+            if fault is not None:
+                fault.before_commit(label, ci)
+            ckpt.commit_chunk(
+                label, carry, rank_offset=rank_offset, chunks=chunks,
+                carry_total=carry_total, degenerate=degenerate,
+                steady=steady, hits=hits, misses=misses, traces=traces,
+                overflow=int(overflow), cand_overflow=int(cand_overflow),
+                matcher_evals=int(matcher_evals),
+                pair_overflow=int(pair_overflow),
+                retries=retries, escalations=escalations,
+                device_bytes=int(device_bytes),
+                load_max=[int(x) for x in load_max],
+                cand_max=[int(x) for x in cand_max])
+            if fault is not None:
+                fault.after_commit(label, ci)
+
     dedup = lambda parts: np.unique(np.concatenate(parts)) if parts \
         else np.empty((0,), RES.PACKED_DTYPE)
     blocked = dedup(blocked_parts)
@@ -338,9 +427,15 @@ def _stream_pass(raw: ChunkStore, cfg: ERConfig, spec, chunk_size: int,
         # must not multiply it by the pass count
         spooled_bytes=runs.spooled_bytes,
         chunk_device_bytes=device_bytes, corpus_bytes=0)
+    resilience = RZ.ResilienceStats(
+        policy=cfg.on_overflow, retries=retries, escalations=escalations,
+        cand_cap=run_cfg.cand_cap or 0, pair_cap=run_cfg.pair_cap or 0,
+        auto_caps=auto_caps)
+    if ckpt is not None:
+        ckpt.mark_pass_done(label)
     return StreamResult(
         blocking=blocking, matches=RES.packed_to_frozenset(matched),
-        stream=stats, metrics=metrics), oracle
+        stream=stats, metrics=metrics, resilience=resilience), oracle
 
 
 def _union_stream(results: Tuple[StreamResult, ...], cfg: ERConfig,
@@ -369,10 +464,19 @@ def _union_stream(results: Tuple[StreamResult, ...], cfg: ERConfig,
     if oracle is not None:
         metrics = compute_metrics(blocking.pairs, oracle,
                                   total_comparisons)
+    rz = [r.resilience for r in results if r.resilience is not None]
+    resilience = None if not rz else RZ.ResilienceStats(
+        policy=rz[0].policy,
+        retries=sum(x.retries for x in rz),
+        escalations=sum(x.escalations for x in rz),
+        cand_cap=max(x.cand_cap for x in rz),
+        pair_cap=max(x.pair_cap for x in rz),
+        auto_caps=any(x.auto_caps for x in rz))
     return StreamResult(
         blocking=blocking,
         matches=frozenset().union(*(r.matches for r in results)),
-        stream=stats, metrics=metrics, passes=results, pass_names=names)
+        stream=stats, metrics=metrics, passes=results, pass_names=names,
+        resilience=resilience)
 
 
 def _finalize(res: StreamResult, nbytes: int,
@@ -387,8 +491,9 @@ def _finalize(res: StreamResult, nbytes: int,
 
 def resolve_stream(chunks: Iterable[dict], cfg: ERConfig, *,
                    chunk_size: Optional[int] = None, mesh=None,
-                   axis: str = "data",
-                   spool_dir: Optional[str] = None) -> StreamResult:
+                   axis: str = "data", spool_dir: Optional[str] = None,
+                   checkpoint_dir: Optional[str] = None,
+                   fault_plan=None) -> StreamResult:
     """Resolve an out-of-core entity stream (see module doc).
 
     ``chunks``: an iterable of entity dicts (``entities.make_entities``
@@ -399,17 +504,94 @@ def resolve_stream(chunks: Iterable[dict], cfg: ERConfig, *,
     ``spool_dir``: directory for the host spool (None keeps chunks in
     memory).  ``mesh``/``axis`` select devices for the shard_map runner.
 
+    ``checkpoint_dir`` makes the run DURABLE (DESIGN.md §11): progress
+    commits crash-atomically after every ingested chunk and every resolved
+    chunk, and re-running the same call — or ``api.resume(checkpoint_dir)``
+    — continues at the last committed chunk with a bit-identical result.
+    The directory doubles as the spool (``spool_dir`` is ignored);
+    ``compute_metrics`` is not supported on checkpointed runs.
+    ``fault_plan`` (a ``resilience.FaultPlan``) injects deterministic
+    crashes at the commit seams — the kill/resume test harness.
+
     The union of per-chunk pair sets is bit-identical to a monolithic
     ``resolve(all_chunks, cfg)`` — provided capacities don't truncate
     (finite ``cand_cap``/``pair_cap``/``cap_factor`` drop-counts apply per
-    chunk, exactly as they would per monolithic call).
+    chunk, exactly as they would per monolithic call;
+    ``on_overflow="retry"`` re-executes overflowed chunks instead).
 
     Returns a ``StreamResult``; with ``cfg.passes`` the top level holds the
     multi-pass union and ``result.passes`` the per-pass results."""
+    if checkpoint_dir is not None:
+        from repro.resilience.checkpoint import StreamCheckpoint
+        ckpt = StreamCheckpoint.open(checkpoint_dir, cfg, chunk_size)
+        return _resolve_checkpointed(chunks, cfg, ckpt, mesh=mesh,
+                                     axis=axis, fault=fault_plan)
+    if fault_plan is not None:
+        raise ValueError("fault_plan injects crashes at checkpoint commit "
+                         "seams and requires checkpoint_dir")
     raw, max_len, total, nbytes = _ingest(chunks, spool_dir)
     return _resolve_ingested(raw, max_len, total, nbytes, cfg,
                              chunk_size=chunk_size, mesh=mesh, axis=axis,
                              spool_dir=spool_dir)
+
+
+def _ingest_checkpointed(chunks: Iterable[dict], store: ChunkStore,
+                         ckpt) -> None:
+    """The durable twin of ``_ingest``: append each (valid-stripped) chunk
+    to the checkpoint's raw store and commit the running ingest totals
+    after every append.  A resumed run re-supplies the SAME deterministic
+    iterator; the first ``ingest.chunks`` non-empty chunks are skipped —
+    they are already durable."""
+    skip = ckpt.ingest["chunks"]
+    max_len = ckpt.ingest["max_len"]
+    total, nbytes = ckpt.ingest["total"], ckpt.ingest["nbytes"]
+    seen = 0
+    for ents in chunks:
+        h = E.to_host(ents)
+        valid = np.asarray(h["valid"], bool)
+        if not valid.all():
+            h = E.host_take(h, valid)
+        if int(h["key"].shape[0]) == 0:
+            continue
+        seen += 1
+        if seen <= skip:
+            continue         # durably committed by the previous run
+        max_len = max(max_len, int(h["key"].shape[0]))
+        total += int(h["key"].shape[0])
+        nbytes += _entity_bytes(h)
+        store.append(h)
+        ckpt.commit_raw(max_len, total, nbytes)
+
+
+def _resolve_checkpointed(chunks: Optional[Iterable[dict]], cfg: ERConfig,
+                          ckpt, *, mesh, axis: str,
+                          fault) -> StreamResult:
+    """Drive one checkpointed run (fresh or resumed) to completion: finish
+    ingest if the manifest says it never completed, then resolve with
+    every pass fast-forwarding over its committed chunks."""
+    if cfg.compute_metrics:
+        raise ValueError(
+            "compute_metrics is not supported with checkpoint_dir: the "
+            "host oracle accumulates over the whole run and is not "
+            "persisted; compute metrics on a separate un-checkpointed run")
+    raw = ckpt.raw_store()
+    if ckpt.phase == "ingest":
+        if chunks is None:
+            raise ValueError(
+                f"checkpoint {ckpt.path!r} stopped during ingest "
+                f"({ckpt.ingest['chunks']} chunks committed); resuming "
+                f"needs the original chunk iterator re-supplied via "
+                f"chunks=...")
+        _ingest_checkpointed(chunks, raw, ckpt)
+        ckpt.ingest_done()
+    ing = ckpt.ingest
+    res = _resolve_ingested(raw, ing["max_len"], ing["total"],
+                            ing["nbytes"], cfg,
+                            chunk_size=ckpt.manifest["chunk_size"],
+                            mesh=mesh, axis=axis, spool_dir=None,
+                            ckpt=ckpt, fault=fault)
+    ckpt.mark_done()
+    return res
 
 
 def _total_stream_comparisons(raw: ChunkStore, total: int, cfg: ERConfig,
@@ -431,11 +613,12 @@ def _total_stream_comparisons(raw: ChunkStore, total: int, cfg: ERConfig,
 
 def _resolve_ingested(raw: ChunkStore, max_len: int, total: int,
                       nbytes: int, cfg: ERConfig, *, chunk_size, mesh,
-                      axis: str, spool_dir,
-                      n_lhs: Optional[int] = None) -> StreamResult:
+                      axis: str, spool_dir, n_lhs: Optional[int] = None,
+                      ckpt=None, fault=None) -> StreamResult:
     """The post-ingest half of ``resolve_stream`` (shared with
     ``link_stream``, which builds its own tagged store and passes its
-    left-source entity count as ``n_lhs``)."""
+    left-source entity count as ``n_lhs``; the checkpoint path passes
+    ``ckpt``/``fault`` through to every pass)."""
     runner = F.make_runner(cfg, mesh=mesh, axis=axis)
     size = chunk_size if chunk_size is not None else max(max_len, 1)
     if size < 1:
@@ -444,13 +627,14 @@ def _resolve_ingested(raw: ChunkStore, max_len: int, total: int,
         if cfg.compute_metrics else 0
     if not cfg.passes:
         res, _ = _stream_pass(raw, cfg, None, size, runner, spool_dir,
-                              "key", total_cmp)
+                              "key", total_cmp, ckpt=ckpt, fault=fault)
         return _finalize(res, nbytes, raw.spooled_bytes)
     sub = cfg.with_(passes=())
     results, oracle = [], (set() if cfg.compute_metrics else None)
     for spec in cfg.passes:
         res, orc = _stream_pass(raw, sub, spec, size, runner, spool_dir,
-                                spec.name, total_cmp)
+                                spec.name, total_cmp, ckpt=ckpt,
+                                fault=fault)
         results.append(res)
         if oracle is not None:
             oracle |= orc

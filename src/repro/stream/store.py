@@ -24,6 +24,29 @@ from typing import Dict, Iterator, List, Optional
 import numpy as np
 
 _PAYLOAD_PREFIX = "payload__"
+_TMP_SUFFIX = ".tmp"
+
+
+def atomic_savez(path: str, **arrays) -> None:
+    """Write an ``.npz`` crash-atomically: serialize to ``{path}.tmp`` in
+    the same directory, then ``os.replace`` onto the final name.  A reader
+    (or a resumed run) therefore sees either the complete previous file or
+    the complete new one, never a torn write; a crash mid-write leaves only
+    a ``.tmp`` leftover that re-attachment/disposal sweeps up."""
+    tmp = path + _TMP_SUFFIX
+    with open(tmp, "wb") as f:       # file object: savez must not append
+        np.savez(f, **arrays)        # its .npz suffix to the tmp name
+    os.replace(tmp, path)
+
+
+def atomic_write_json(path: str, obj) -> None:
+    """Crash-atomic JSON write (same tmp-then-``os.replace`` contract as
+    ``atomic_savez``) — the manifest writer of ``repro.resilience``."""
+    import json
+    tmp = path + _TMP_SUFFIX
+    with open(tmp, "w") as f:
+        json.dump(obj, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
 
 
 class ChunkStore:
@@ -47,6 +70,44 @@ class ChunkStore:
 
     def __len__(self) -> int:
         return len(self._mem)
+
+    @classmethod
+    def attach(cls, spool_dir: str, prefix: str = "chunk",
+               count: Optional[int] = None) -> "ChunkStore":
+        """Re-open an existing on-disk spool (the checkpoint/resume path).
+
+        Adopts ``{prefix}{i:06d}.npz`` for consecutive ``i`` from 0; with
+        ``count`` (a manifest's durably-committed chunk total) exactly that
+        many files are adopted — later files and ``.tmp`` leftovers are
+        DELETED, since they can only be the un-committed debris of the
+        append that was in flight when the previous run died."""
+        store = cls(spool_dir, prefix=prefix)
+        i = 0
+        while count is None or i < count:
+            path = os.path.join(spool_dir, f"{prefix}{i:06d}.npz")
+            if not os.path.exists(path):
+                break
+            store._mem.append(None)
+            store._paths.append(path)
+            store.spooled_bytes += os.path.getsize(path)
+            i += 1
+        if count is not None and i < count:
+            raise FileNotFoundError(
+                f"spool {spool_dir!r} holds only {i} '{prefix}' chunks but "
+                f"the manifest committed {count}; the checkpoint is "
+                f"corrupt (files deleted behind the manifest's back)")
+        for name in os.listdir(spool_dir):   # sweep un-committed debris
+            if not name.startswith(prefix):
+                continue
+            path = os.path.join(spool_dir, name)
+            if name.endswith(_TMP_SUFFIX) or path not in store._paths:
+                try:
+                    os.remove(path)
+                except OSError:
+                    pass
+        if len(store) > 0:
+            store._check_schema(store.load(0))
+        return store
 
     @property
     def n_entities(self) -> int:
@@ -72,10 +133,12 @@ class ChunkStore:
             return
         i = len(self._mem)
         path = os.path.join(self.spool_dir, f"{self.prefix}{i:06d}.npz")
-        np.savez(path, key=ents["key"], eid=ents["eid"],
-                 valid=ents["valid"],
-                 **{_PAYLOAD_PREFIX + k: v
-                    for k, v in ents["payload"].items()})
+        # tmp-then-rename: a crash mid-append can never leave a torn chunk
+        # file behind for a resumed run to trip over
+        atomic_savez(path, key=ents["key"], eid=ents["eid"],
+                     valid=ents["valid"],
+                     **{_PAYLOAD_PREFIX + k: v
+                        for k, v in ents["payload"].items()})
         self.spooled_bytes += os.path.getsize(path)
         self._mem.append(None)
         self._paths.append(path)
@@ -122,10 +185,11 @@ class ChunkStore:
         actually reclaimed from the spool directory."""
         for path in self._paths:
             if path:
-                try:
-                    os.remove(path)
-                except OSError:
-                    pass
+                for p in (path, path + _TMP_SUFFIX):
+                    try:
+                        os.remove(p)
+                    except OSError:
+                        pass     # already gone (e.g. a crash raced us)
         self.spooled_bytes = 0
         self._mem = []
         self._paths = []

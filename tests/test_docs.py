@@ -3,8 +3,9 @@
   * **API-reference docstring lint** (ast-based, no imports needed): every
     public module / class / function / method on the public surface —
     ``repro.api.*``, ``repro.balance.*``, ``repro.perf.cache``,
-    ``repro.stream.*`` — carries a real docstring (functions that take
-    arguments get a substantive one, not a stub).
+    ``repro.stream.*``, ``repro.serve.*``, ``repro.resilience.*`` —
+    carries a real docstring (functions that take arguments get a
+    substantive one, not a stub).
   * **Local link check**: every relative markdown link in README.md,
     DESIGN.md, ROADMAP.md and docs/ resolves to a file in the repo (the
     executable-code-block check runs in CI via tools/check_docs.py).
@@ -25,6 +26,8 @@ PUBLIC_MODULES = sorted(
     [*(REPO / "src/repro/api").glob("*.py"),
      *(REPO / "src/repro/balance").glob("*.py"),
      *(REPO / "src/repro/stream").glob("*.py"),
+     *(REPO / "src/repro/serve").glob("*.py"),
+     *(REPO / "src/repro/resilience").glob("*.py"),
      REPO / "src/repro/perf/cache.py"])
 
 DOC_FILES = check_docs.default_doc_files()

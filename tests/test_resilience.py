@@ -1,0 +1,435 @@
+"""Fault tolerance (DESIGN.md §11, invariant 11): checkpointed resumable
+streaming, overflow-recovery retries, and serve durability.
+
+  * kill-at-every-chunk-boundary property: for EVERY chunk index k (clean
+    kill after commit AND torn kill between spool and commit), all three
+    variants x {scan, pallas}, the resumed pair union is bit-identical to
+    an uninterrupted monolithic resolve
+  * mid-ingest kills resume by re-supplying the iterator; config /
+    chunk-size drift across a resume is rejected loudly
+  * overflow recovery: ``on_overflow="retry"`` re-executes with doubled
+    caps and drops ZERO pairs; "count" keeps the legacy counters; "raise"
+    and an exhausted ladder raise ``CapacityOverflowError``
+  * auto caps: unset (None) caps size from the key profile on
+    profile-backed plans; explicit caps always win; legacy partitioners
+    keep the historical unbounded semantics
+  * ChunkStore atomic appends + attach/dispose crash hygiene
+  * serve durability: index/service snapshot-restore parity, worker
+    failure surfacing, graceful close(drain=True)
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro import api, stream
+from repro.core import entities as E
+from repro.resilience import (CapacityOverflowError, FaultPlan,
+                              InjectedFault, flaky_chunks, micro_caps,
+                              resume_stream)
+from repro.stream.store import ChunkStore, atomic_savez
+
+N, R, W = 360, 4, 6
+CHUNK = 60
+VARIANTS = ["srp", "repsn", "jobsn"]
+ENGINES = ["scan", "pallas"]
+
+
+def _cfg(**kw):
+    kw.setdefault("window", W)
+    kw.setdefault("num_shards", R)
+    kw.setdefault("variant", "repsn")
+    kw.setdefault("hops", R - 1)
+    kw.setdefault("runner", "vmap")
+    return api.ERConfig(**kw)
+
+
+@pytest.fixture(scope="module")
+def ents():
+    rng = np.random.default_rng(11)
+    return E.synth_entities(rng, N, n_keys=60, dup_frac=0.25, text_len=8)
+
+
+def _chunks(ents, sz=CHUNK):
+    h = E.to_host(ents)
+    n = int(h["key"].shape[0])
+    return [E.host_take(h, slice(s, min(s + sz, n)))
+            for s in range(0, n, sz)]
+
+
+# -- kill/resume parity -------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_kill_at_every_chunk_boundary(tmp_path, ents, variant, engine):
+    """Property: killing the stream at ANY chunk k — cleanly after the
+    commit or torn between spool and commit — and resuming yields the
+    bit-identical pair union of an uninterrupted monolithic resolve."""
+    cfg = _cfg(variant=variant, band_engine=engine)
+    ref = api.resolve(ents, cfg)
+    n_chunks = (N + CHUNK - 1) // CHUNK
+    for k in range(n_chunks):
+        # alternate the crash kind so both commit seams get every index
+        fault = FaultPlan(crash_after_chunk=k) if k % 2 == 0 \
+            else FaultPlan(crash_before_commit=k)
+        d = str(tmp_path / f"{variant}-{engine}-{k}")
+        with pytest.raises(InjectedFault):
+            stream.resolve_stream(_chunks(ents), cfg, chunk_size=CHUNK,
+                                  checkpoint_dir=d, fault_plan=fault)
+        res = api.resume(d)
+        assert res.pairs == ref.pairs, (variant, engine, k)
+        assert res.matches == ref.matches, (variant, engine, k)
+        assert res.stream.chunks == n_chunks
+
+
+def test_mid_ingest_kill_resumes_with_fresh_iterator(tmp_path, ents):
+    cfg = _cfg()
+    ref = stream.resolve_stream(_chunks(ents), cfg, chunk_size=CHUNK)
+    d = str(tmp_path / "ingest")
+    with pytest.raises(InjectedFault):
+        stream.resolve_stream(flaky_chunks(_chunks(ents), 3), cfg,
+                              chunk_size=CHUNK, checkpoint_dir=d)
+    # mid-ingest checkpoints cannot resume without the iterator...
+    with pytest.raises(ValueError, match="re-supplied"):
+        api.resume(d)
+    # ...and resume with it — already-committed chunks are skipped
+    res = api.resume(d, chunks=_chunks(ents))
+    assert res.pairs == ref.pairs
+    assert res.matches == ref.matches
+
+
+def test_rerunning_same_command_is_a_resume(tmp_path, ents):
+    """A killed ``resolve_stream(checkpoint_dir=...)`` resumes simply by
+    re-running the same call — the manifest is matched, not recreated."""
+    cfg = _cfg()
+    ref = api.resolve(ents, cfg)
+    d = str(tmp_path / "rerun")
+    with pytest.raises(InjectedFault):
+        stream.resolve_stream(_chunks(ents), cfg, chunk_size=CHUNK,
+                              checkpoint_dir=d,
+                              fault_plan=FaultPlan(crash_after_chunk=2))
+    res = stream.resolve_stream(_chunks(ents), cfg, chunk_size=CHUNK,
+                                checkpoint_dir=d)
+    assert res.pairs == ref.pairs
+
+
+def test_checkpointed_run_and_resume_of_done(tmp_path, ents):
+    cfg = _cfg()
+    plain = stream.resolve_stream(_chunks(ents), cfg, chunk_size=CHUNK)
+    d = str(tmp_path / "full")
+    ck = stream.resolve_stream(_chunks(ents), cfg, chunk_size=CHUNK,
+                               checkpoint_dir=d)
+    assert ck.pairs == plain.pairs and ck.matches == plain.matches
+    again = api.resume(d)          # a completed checkpoint replays entirely
+    assert again.pairs == plain.pairs
+
+
+def test_multipass_checkpoint_resume(tmp_path, ents):
+    passes = (api.SortKeySpec(name="fwd", source="key"),
+              api.SortKeySpec(name="sig", source="text", kind="prefix",
+                              width=3))
+    cfg = _cfg(passes=passes)
+    ref = stream.resolve_stream(_chunks(ents), cfg, chunk_size=CHUNK)
+    d = str(tmp_path / "mp")
+    with pytest.raises(InjectedFault):
+        stream.resolve_stream(
+            _chunks(ents), cfg, chunk_size=CHUNK, checkpoint_dir=d,
+            fault_plan=FaultPlan(crash_after_chunk=1, label="sig"))
+    res = api.resume(d)
+    assert res.pairs == ref.pairs
+    assert res.pass_names == ref.pass_names
+    for a, b in zip(res.passes, ref.passes):
+        assert a.pairs == b.pairs
+
+
+def test_resume_guards(tmp_path, ents):
+    cfg = _cfg()
+    with pytest.raises(FileNotFoundError):
+        api.resume(str(tmp_path / "nowhere"))
+    d = str(tmp_path / "guards")
+    stream.resolve_stream(_chunks(ents), cfg, chunk_size=CHUNK,
+                          checkpoint_dir=d)
+    # config drift across a resume is rejected by fingerprint
+    with pytest.raises(ValueError, match="fingerprint"):
+        resume_stream(d, cfg=cfg.with_(window=W + 2))
+    # so is a changed chunk grid (it defines the commit points)
+    with pytest.raises(ValueError, match="chunk_size"):
+        stream.resolve_stream(_chunks(ents), cfg, chunk_size=CHUNK + 1,
+                              checkpoint_dir=d)
+    # and a changed shard layout (it shapes the pair sets)
+    with pytest.raises(ValueError, match="fingerprint|setup"):
+        resume_stream(d, cfg=cfg.with_(num_shards=R * 2))
+
+
+def test_checkpoint_rejects_compute_metrics(tmp_path, ents):
+    with pytest.raises(ValueError, match="compute_metrics"):
+        stream.resolve_stream(_chunks(ents), _cfg(compute_metrics=True),
+                              chunk_size=CHUNK,
+                              checkpoint_dir=str(tmp_path / "m"))
+
+
+def test_fault_plan_requires_checkpoint(ents):
+    with pytest.raises(ValueError, match="checkpoint_dir"):
+        stream.resolve_stream(_chunks(ents), _cfg(), chunk_size=CHUNK,
+                              fault_plan=FaultPlan(crash_after_chunk=0))
+
+
+# -- overflow recovery --------------------------------------------------------
+
+def _pairs_cfg(**kw):
+    kw.setdefault("variant", "srp")
+    kw.setdefault("emit", "pairs")
+    kw.setdefault("partitioner", "uniform")
+    return _cfg(**kw)
+
+
+def test_retry_drops_zero_pairs_stream(ents):
+    base = stream.resolve_stream(_chunks(ents), _pairs_cfg(pair_cap=0),
+                                 chunk_size=CHUNK)
+    tiny = micro_caps(_pairs_cfg(), pair_cap=32).with_(
+        cand_cap=None, on_overflow="retry", retry_limit=8)
+    res = stream.resolve_stream(_chunks(ents), tiny, chunk_size=CHUNK)
+    assert res.pairs == base.pairs and res.matches == base.matches
+    assert res.blocking.pair_overflow == 0          # recovered, not counted
+    assert res.resilience.retries > 0
+    assert res.resilience.escalations >= res.resilience.retries
+    # the escalated cap is sticky: later chunks reuse it instead of
+    # re-climbing the ladder, so retries stay far below chunks * ladder
+    assert res.resilience.pair_cap > 32
+
+
+def test_retry_drops_zero_pairs_resolve(ents):
+    base = api.resolve(ents, _pairs_cfg(pair_cap=0))
+    tiny = micro_caps(_pairs_cfg(), pair_cap=32).with_(
+        cand_cap=None, on_overflow="retry", retry_limit=8)
+    res = api.resolve(ents, tiny)
+    assert res.pairs == base.pairs and res.matches == base.matches
+    assert res.blocking.pair_overflow == 0
+    assert res.resilience.retries > 0
+
+
+def test_count_policy_keeps_legacy_counters(ents):
+    tiny = micro_caps(_pairs_cfg(), pair_cap=8).with_(cand_cap=None)
+    res = api.resolve(ents, tiny)
+    assert res.blocking.pair_overflow > 0           # counted, not recovered
+    assert res.resilience.retries == 0
+
+
+def test_raise_policy_raises(ents):
+    tiny = micro_caps(_pairs_cfg(), pair_cap=8).with_(
+        cand_cap=None, on_overflow="raise")
+    with pytest.raises(CapacityOverflowError) as ei:
+        api.resolve(ents, tiny)
+    assert ei.value.pair_overflow > 0
+
+
+def test_exhausted_ladder_raises(ents):
+    tiny = micro_caps(_pairs_cfg(), pair_cap=2).with_(
+        cand_cap=None, on_overflow="retry", retry_limit=1)
+    with pytest.raises(CapacityOverflowError) as ei:
+        api.resolve(ents, tiny)
+    assert ei.value.retries == 1
+
+
+# -- capacity auto-sizing -----------------------------------------------------
+
+def test_auto_caps_from_profile_backed_plan(ents):
+    base = api.resolve(ents, _pairs_cfg(pair_cap=0))
+    res = api.resolve(ents, _pairs_cfg())           # pair_cap unset -> auto
+    assert res.resilience.auto_caps
+    assert res.resilience.pair_cap > 0
+    assert res.blocking.pair_overflow == 0          # band bound never clips
+    assert res.pairs == base.pairs
+
+
+def test_explicit_caps_override_auto(ents):
+    res = api.resolve(ents, _pairs_cfg(pair_cap=7))
+    assert not res.resilience.auto_caps
+    assert res.resilience.pair_cap == 7
+    assert res.blocking.pair_overflow > 0           # tiny cap honored
+
+
+def test_default_config_consumes_no_caps(ents):
+    # the default emit/engine consume no capacity knobs, so unset caps stay
+    # at the historical 0 (= unbounded) and nothing is auto-sized — default
+    # runs keep their legacy shapes and executable-cache keys
+    res = api.resolve(ents, _cfg())
+    assert not res.resilience.auto_caps
+    assert res.resilience.pair_cap == 0
+    assert res.resilience.cand_cap == 0
+    assert res.blocking.pair_overflow == 0
+
+
+def test_stream_auto_caps(ents):
+    base = stream.resolve_stream(_chunks(ents), _pairs_cfg(pair_cap=0),
+                                 chunk_size=CHUNK)
+    res = stream.resolve_stream(_chunks(ents), _pairs_cfg(),
+                                chunk_size=CHUNK)
+    assert res.resilience.auto_caps
+    assert res.blocking.pair_overflow == 0
+    assert res.pairs == base.pairs
+
+
+def test_config_overflow_validation():
+    with pytest.raises(ValueError, match="on_overflow"):
+        _cfg(on_overflow="explode")
+    with pytest.raises(ValueError, match="retry_limit"):
+        _cfg(retry_limit=-1)
+    with pytest.raises(ValueError, match="cand_cap"):
+        _cfg(cand_cap=-2)
+    with pytest.raises(ValueError, match="pair_cap"):
+        _cfg(pair_cap=-2)
+    assert _cfg().cand_cap is None                  # None = auto is legal
+
+
+# -- ChunkStore crash hygiene -------------------------------------------------
+
+def test_atomic_append_leaves_no_tmp(tmp_path, ents):
+    store = ChunkStore(str(tmp_path), prefix="c")
+    for h in _chunks(ents, 90):
+        store.append(h)
+    names = sorted(os.listdir(tmp_path))
+    assert names == [f"c{i:06d}.npz" for i in range(len(store))]
+
+
+def test_attach_sweeps_uncommitted_debris(tmp_path, ents):
+    hs = _chunks(ents, 90)
+    store = ChunkStore(str(tmp_path), prefix="c")
+    for h in hs:
+        store.append(h)
+    # simulate a crash mid-append: a torn tmp + a chunk the manifest never
+    # committed (count=2 adopts only the first two)
+    open(tmp_path / "c000099.npz.tmp", "wb").write(b"torn")
+    att = ChunkStore.attach(str(tmp_path), "c", count=2)
+    assert len(att) == 2
+    left = sorted(os.listdir(tmp_path))
+    assert left == ["c000000.npz", "c000001.npz"]
+    got = att.load(1)
+    np.testing.assert_array_equal(got["key"], hs[1]["key"])
+    # a manifest promising more chunks than exist is corruption, not silence
+    with pytest.raises(FileNotFoundError, match="committed"):
+        ChunkStore.attach(str(tmp_path), "c", count=5)
+
+
+def test_dispose_tolerates_missing_files(tmp_path, ents):
+    store = ChunkStore(str(tmp_path), prefix="c")
+    for h in _chunks(ents, 120):
+        store.append(h)
+    os.remove(tmp_path / "c000000.npz")     # crashed cleanup raced us
+    store.dispose()                          # must not raise
+    assert [n for n in os.listdir(tmp_path) if n.startswith("c")] == []
+    assert store.spooled_bytes == 0
+
+
+def test_atomic_savez_replaces_whole_file(tmp_path):
+    p = str(tmp_path / "x.npz")
+    atomic_savez(p, a=np.arange(4))
+    atomic_savez(p, a=np.arange(9))         # overwrite is atomic too
+    with np.load(p) as z:
+        assert z["a"].shape == (9,)
+    assert not os.path.exists(p + ".tmp")
+
+
+# -- serve durability ---------------------------------------------------------
+
+def _serve_cfg():
+    return _cfg(variant="repsn", partitioner="uniform")
+
+
+def test_index_snapshot_restore_parity(tmp_path, ents):
+    from repro.serve import SortedIndex
+    idx = SortedIndex(W)
+    for h in _chunks(ents, 90):
+        idx.insert(E.sort_chunk(E.make_entities(
+            h["key"], h["eid"], payload=h["payload"], valid=h["valid"])))
+    idx.delete(np.asarray(E.to_host(ents)["eid"])[5:25])
+    idx.snapshot(str(tmp_path))
+    back = SortedIndex.restore(str(tmp_path))
+    assert back.n_live == idx.n_live
+    np.testing.assert_array_equal(back.live_comps, idx.live_comps)
+    # the restored profile is EXACTLY the live one (merge is exact), so
+    # every downstream plan is identical
+    np.testing.assert_array_equal(back.profile.uniq, idx.profile.uniq)
+    np.testing.assert_array_equal(back.profile.counts, idx.profile.counts)
+
+
+def test_service_snapshot_restore_serves_identical_pairs(tmp_path, ents):
+    h = E.to_host(ents)
+    svc = api.serve(_serve_cfg(), start=False)
+    for i in range(0, 240, 60):
+        svc.resolve_incremental(E.host_take(h, slice(i, i + 60)))
+    svc.delete(np.asarray(h["eid"])[10:20])
+    svc.snapshot(str(tmp_path))
+    from repro.serve import ResolutionService
+    back = ResolutionService.restore(str(tmp_path), _serve_cfg(),
+                                     start=False)
+    assert back.pairs == svc.pairs and back.matches == svc.matches
+    # further mutations stay in lock-step, and pair ids survive the restore
+    r1 = svc.resolve_incremental(E.host_take(h, slice(240, 300)))
+    r2 = back.resolve_incremental(E.host_take(h, slice(240, 300)))
+    assert r1.new_pairs == r2.new_pairs
+    assert svc.pairs == back.pairs
+    for p in list(r1.new_pairs)[:5]:
+        assert svc.pair_id(p) == back.pair_id(p)
+
+
+def test_service_restore_rejects_config_drift(tmp_path, ents):
+    svc = api.serve(_serve_cfg(), start=False,
+                    initial=E.host_take(E.to_host(ents), slice(0, 60)))
+    svc.snapshot(str(tmp_path))
+    from repro.serve import ResolutionService
+    with pytest.raises(ValueError, match="snapshot"):
+        ResolutionService.restore(str(tmp_path),
+                                  _serve_cfg().with_(window=W + 2),
+                                  start=False)
+
+
+def test_service_worker_failure_surfaces(ents):
+    h = E.to_host(ents)
+    svc = api.serve(_serve_cfg())
+    svc.resolve_incremental(E.host_take(h, slice(0, 60)))
+
+    class Boom(RuntimeError):
+        pass
+
+    def broken(*a, **k):
+        raise Boom("injected delta failure")
+
+    svc._delta.insert = broken
+    fut = svc.submit_insert(E.host_take(h, slice(60, 90)))
+    with pytest.raises(Boom):
+        fut.result(timeout=30)
+    # the failure is recorded, surfaced in stats, and the service refuses
+    # new work instead of dying silently
+    deadline = 50
+    while svc.stats().failure is None and deadline:
+        import time
+        time.sleep(0.05)
+        deadline -= 1
+    assert svc.stats().failure is not None
+    with pytest.raises(RuntimeError, match="failed"):
+        svc.submit_insert(E.host_take(h, slice(90, 120)))
+
+
+def test_service_value_error_keeps_serving(ents):
+    h = E.to_host(ents)
+    svc = api.serve(_serve_cfg())
+    svc.resolve_incremental(E.host_take(h, slice(0, 60)))
+    with pytest.raises(ValueError):
+        svc.resolve_incremental(E.host_take(h, slice(0, 5)))  # live eids
+    res = svc.resolve_incremental(E.host_take(h, slice(60, 120)))
+    assert res.batched >= 1
+    assert svc.stats().failure is None
+    svc.close()
+
+
+def test_service_close_drain(ents):
+    h = E.to_host(ents)
+    svc = api.serve(_serve_cfg())
+    futs = [svc.submit_insert(E.host_take(h, slice(i, i + 30)))
+            for i in range(0, 180, 30)]
+    svc.close(drain=True)
+    for f in futs:
+        assert f.exception(timeout=30) is None     # all served before stop
+    with pytest.raises(RuntimeError, match="closed"):
+        svc.submit_insert(E.host_take(h, slice(180, 210)))
