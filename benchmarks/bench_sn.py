@@ -41,6 +41,12 @@ stays as an alias of ``steady_seconds`` for downstream readers.
                            overhead vs plain streaming, kill/resume wall
                            time + parity, overflow-retry zero-dropped-pairs
                            — the BENCH_resilience.json baseline
+  * obs_body             — observability (ISSUE 8): traced vs untraced
+                           steady resolve (tracing overhead), the
+                           deterministic disabled-path cost, zero extra
+                           retraces under tracing, and per-variant streamed
+                           trace coverage + the exported Chrome trace —
+                           the BENCH_obs.json baseline
 """
 from __future__ import annotations
 
@@ -701,3 +707,101 @@ def resilience_body(n: int = 24_000, chunk: int = 6_000, w: int = 10,
         }
     finally:
         shutil.rmtree(root, ignore_errors=True)
+
+
+def obs_body(n: int = 12_000, chunk: int = 3_000, w: int = 8,
+             n_keys: int = 2048, r: int = 4, reps: int = 5) -> dict:
+    """Observability overhead + coverage (ISSUE 8 acceptance).
+
+    Four claims, measured on one corpus:
+
+      * **traced overhead** — steady resolve wall time with
+        ``trace=True`` over the untraced steady time (median of ``reps``
+        blocked warm calls each, same warm executable cache); the gate is
+        <= 5%.
+      * **disabled overhead** — the cost tracing adds when it is OFF,
+        measured deterministically instead of as wall-clock jitter: the
+        per-call cost of a no-op span (no active tracer, the exact
+        disabled-path code) times the span count a traced run records,
+        over the untraced steady time; the gate is <= 1%.
+      * **zero extra retraces** — the traced loop runs on the cache the
+        untraced loop warmed; ``trace`` is excluded from the executable
+        fingerprint (invariant 12), so it must add ZERO traces.
+      * **coverage** — a traced streamed run per variant: the root
+        ``stream`` span's direct children must sum to >= 90% of its wall
+        (per-chunk spans account for the run); the repsn trace is
+        exported as ``BENCH_obs_trace.json`` for the Chrome-trace CI
+        artifact + ``tools/trace_report.py``.
+    """
+    import jax
+    from repro import api, obs, stream
+    from repro.core import entities as E
+    from repro.data.corpus import synth_entity_chunks
+    from repro.perf.cache import executable_cache
+
+    def chunks():
+        return synth_entity_chunks(0, n, chunk, n_keys=n_keys,
+                                   dup_frac=0.2)
+
+    full = E.host_concat([E.to_host(c) for c in chunks()])
+    ents = E.make_entities(full["key"], full["eid"],
+                           payload=full["payload"])
+    cfg = api.ERConfig(window=w, variant="repsn", hops=r - 1,
+                       runner="vmap", num_shards=r)
+
+    _cold, untraced_s, _ = _cold_steady(lambda: api.resolve(ents, cfg),
+                                        steady_reps=reps)
+    cache = executable_cache()
+    before = cache.stats.snapshot()
+    ts, res = [], None
+    for _ in range(max(reps, 5)):
+        t0 = time.perf_counter()
+        res = jax.block_until_ready(
+            api.resolve(ents, cfg.with_(trace=True)))
+        ts.append(time.perf_counter() - t0)
+    traced_s = float(np.median(ts))
+    _h, _m, extra_traces = cache.stats.delta(before)
+    spans_per_resolve = len(res.trace.spans)
+
+    # the disabled path, timed directly: one with-block over the no-op
+    # singleton per call site (there is no active tracer here)
+    loops = 200_000
+    t0 = time.perf_counter()
+    for _ in range(loops):
+        with obs.span("x", attr=1):
+            pass
+    noop_s = (time.perf_counter() - t0) / loops
+
+    streams = {}
+    trace_path = "BENCH_obs_trace.json"
+    for variant in ["srp", "repsn", "jobsn"]:
+        sres = stream.resolve_stream(chunks(),
+                                     cfg.with_(variant=variant,
+                                               trace=True),
+                                     chunk_size=chunk)
+        tr = sres.trace
+        streams[variant] = {"wall_s": tr.wall, "spans": len(tr.spans),
+                            "coverage": tr.coverage(),
+                            "chunks": sres.stream.chunks}
+        if variant == "repsn":
+            tr.export_chrome(trace_path)
+
+    return {
+        "n": n, "chunk": chunk, "w": w, "r": r, "variant": "repsn",
+        "backend": jax.default_backend(),
+        "steady_untraced_seconds": untraced_s,
+        "steady_traced_seconds": traced_s,
+        "seconds": traced_s,
+        "traced_overhead": traced_s / max(untraced_s, 1e-9) - 1.0,
+        "noop_span_seconds": noop_s,
+        "spans_per_resolve": spans_per_resolve,
+        "disabled_overhead": spans_per_resolve * noop_s
+        / max(untraced_s, 1e-9),
+        "extra_traces_when_traced": int(extra_traces),
+        "zero_extra_retraces": int(extra_traces) == 0,
+        "span_totals": res.trace.span_totals(),
+        "stream": streams,
+        "coverage_all": all(v["coverage"] >= 0.9
+                            for v in streams.values()),
+        "trace_file": trace_path,
+    }

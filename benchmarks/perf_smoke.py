@@ -29,6 +29,28 @@ import argparse
 import json
 import sys
 
+# every BENCH blob is stamped by benchmarks.run.write_bench with the shared
+# repro.obs schema version; import it when the package is on the path, with
+# a literal fallback so the gate stays runnable standalone (CI invokes this
+# module without PYTHONPATH=src)
+try:
+    from repro.obs.schema import SCHEMA_VERSION as EXPECTED_SCHEMA
+except ImportError:                                   # pragma: no cover
+    EXPECTED_SCHEMA = 1
+
+
+def check_schema(blob: dict, label: str) -> list:
+    """Refuse a BENCH blob whose stamped ``schema_version`` does not match
+    this checker's (pre-stamp blobs report None): comparing fields across
+    schema drift produces silently wrong verdicts, so the mismatch itself
+    is a loud failure."""
+    got = blob.get("schema_version")
+    if got != EXPECTED_SCHEMA:
+        return [f"{label}: schema_version={got!r} != expected "
+                f"{EXPECTED_SCHEMA} — regenerate with benchmarks.run "
+                f"(write_bench stamps the shared version)"]
+    return []
+
 
 def _steady_pairs_per_s(engine_blob: dict) -> float:
     """pairs_per_s from a bench blob; pre-split baselines (no
@@ -196,6 +218,50 @@ def check_resilience(blob: dict) -> list:
     return failures
 
 
+def check_obs(blob: dict) -> list:
+    """Observability gates over a BENCH_obs.json (ISSUE 8 acceptance).
+
+    All four are machine-independent ratios or exact counts: traced
+    steady resolve must cost <= 5% over untraced (both halves timed in
+    the same run on the same warm cache), the disabled path <= 1% (no-op
+    span cost x spans-per-run over the untraced steady time — measured
+    deterministically, not as wall jitter), a traced run must add ZERO
+    executable-cache traces (``trace`` is excluded from the fingerprint —
+    invariant 12), and every streamed variant's child spans must cover
+    >= 90% of the root ``stream`` span (the trace accounts for the run)."""
+    failures = []
+    t = float(blob.get("traced_overhead", 1.0))
+    if t > 0.05:
+        failures.append(
+            f"tracing costs {t * 100:.1f}% over untraced steady state "
+            f"(> 5%): span recording is no longer amortized by the "
+            f"resolve compute")
+    d = float(blob.get("disabled_overhead", 1.0))
+    if d > 0.01:
+        failures.append(
+            f"the DISABLED tracing path costs {d * 100:.2f}% of steady "
+            f"resolve time (> 1%): the no-op span fast path regressed "
+            f"(it must stay one thread-local lookup)")
+    if not blob.get("zero_extra_retraces", False):
+        failures.append(
+            f"a traced run performed "
+            f"{blob.get('extra_traces_when_traced')} extra executable "
+            f"trace(s): trace=True changed an executable fingerprint "
+            f"(invariant 12 — tracing must hit the untraced run's cache)")
+    for variant, v in (blob.get("stream") or {}).items():
+        cov = float(v.get("coverage", 0.0))
+        if cov < 0.9:
+            failures.append(
+                f"streamed {variant!r} trace coverage {cov:.3f} < 0.9: "
+                f"per-chunk spans no longer account for the stream wall")
+    print(f"perf_smoke obs: traced_overhead={t:.4f} "
+          f"disabled_overhead={d:.5f} "
+          f"zero_retrace={blob.get('zero_extra_retraces')} "
+          f"coverage={[round(float(v.get('coverage', 0.0)), 3) for v in (blob.get('stream') or {}).values()]} "
+          f"-> {'OK' if not failures else 'FAIL'}")
+    return failures
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("baseline", help="committed BENCH_band_engine.json")
@@ -211,18 +277,32 @@ def main() -> None:
                          "— adds the fault-tolerance structural gates "
                          "(checkpoint overhead <= 15%%, resume parity, "
                          "zero dropped pairs under retry)")
+    ap.add_argument("--obs", default=None,
+                    help="optional freshly generated BENCH_obs.json — adds "
+                         "the observability gates (traced overhead <= 5%%, "
+                         "disabled <= 1%%, zero extra retraces, streamed "
+                         "trace coverage >= 0.9)")
     args = ap.parse_args()
     with open(args.baseline) as f:
         baseline = json.load(f)
     with open(args.current) as f:
         current = json.load(f)
-    failures = check(baseline, current, args.tolerance)
+    failures = check_schema(baseline, "baseline") \
+        + check_schema(current, "current")
+    failures += check(baseline, current, args.tolerance)
     if args.serve:
         with open(args.serve) as f:
-            failures += check_serve(json.load(f))
+            blob = json.load(f)
+        failures += check_schema(blob, "serve") + check_serve(blob)
     if args.resilience:
         with open(args.resilience) as f:
-            failures += check_resilience(json.load(f))
+            blob = json.load(f)
+        failures += check_schema(blob, "resilience") \
+            + check_resilience(blob)
+    if args.obs:
+        with open(args.obs) as f:
+            blob = json.load(f)
+        failures += check_schema(blob, "obs") + check_obs(blob)
     if failures:
         for msg in failures:
             print(f"perf_smoke FAIL: {msg}", file=sys.stderr)

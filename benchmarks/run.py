@@ -23,9 +23,18 @@ Tables:
   resilience            fault tolerance: checkpointed stream overhead,
                         kill/resume wall time + parity, overflow-retry
                         zero-dropped-pairs; writes BENCH_resilience.json
+  obs                   observability: traced vs untraced steady resolve,
+                        disabled-path cost, zero extra retraces, streamed
+                        trace coverage per variant; writes BENCH_obs.json
+                        + the Chrome trace BENCH_obs_trace.json
   kernels               Pallas band kernels vs jnp oracle (CPU timings)
   dedup_e2e             end-to-end corpus dedup throughput + SN-vs-n^2 factor
   roofline              summary of dry-run roofline terms (needs artifacts)
+
+Every BENCH_*.json goes through ``write_bench``, which stamps the shared
+``schema_version`` (``repro.obs.SCHEMA_VERSION``) and a ``machine_proxy_s``
+host-speed micro-bench so cross-machine comparisons (perf_smoke) can
+validate and normalize uniformly.
 """
 from __future__ import annotations
 
@@ -39,6 +48,35 @@ import numpy as np
 
 def _row(name: str, us: float, derived: str):
     print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def _machine_proxy(reps: int = 3) -> float:
+    """Best-of-``reps`` seconds for a fixed synthetic numpy workload (the
+    same dedup/concat shape the pair-collection path performs) — a
+    machine-speed proxy stamped into every BENCH blob so perf_smoke can
+    normalize absolute numbers across machine classes."""
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, 2 ** 31, 200_000).astype(np.uint64)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        np.unique(np.concatenate([a, a[::2]]))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def write_bench(path: str, res: dict) -> None:
+    """THE one BENCH_*.json writer: stamps the shared ``schema_version``
+    (from ``repro.obs``) and the ``machine_proxy_s`` host-speed proxy,
+    then writes the blob.  perf_smoke refuses blobs whose schema_version
+    does not match its own — a drifted writer/reader pair fails loudly
+    instead of silently comparing mismatched fields."""
+    from repro.obs import SCHEMA_VERSION
+    res = dict(res)
+    res["schema_version"] = SCHEMA_VERSION
+    res["machine_proxy_s"] = _machine_proxy()
+    with open(path, "w") as f:
+        json.dump(res, f, indent=2)
 
 
 def fig8_scalability(quick: bool):
@@ -109,8 +147,7 @@ def band_engine(quick: bool):
     _row("band_engine_collection", c["packed_seconds"] * 1e6,
          f"pairs={c['pairs']};set_us={c['set_seconds'] * 1e6:.0f};"
          f"packed_speedup={c['speedup']:.1f}x")
-    with open("BENCH_band_engine.json", "w") as f:
-        json.dump(res, f, indent=2)
+    write_bench("BENCH_band_engine.json", res)
 
 
 def balance(quick: bool):
@@ -133,8 +170,7 @@ def balance(quick: bool):
          f"blocksplit={res['imbalance_reduction']['blocksplit']:.1f}x;"
          f"pairrange={res['imbalance_reduction']['pairrange']:.1f}x;"
          f"parity={res['parity']['all_equal_oracle']}")
-    with open("BENCH_balance.json", "w") as f:
-        json.dump(res, f, indent=2)
+    write_bench("BENCH_balance.json", res)
 
 
 def stream(quick: bool):
@@ -157,8 +193,7 @@ def stream(quick: bool):
     _row("stream_parity", 0.0,
          f"all_equal={res['parity_all']};"
          f"combos={len(res['parity'])}")
-    with open("BENCH_stream.json", "w") as f:
-        json.dump(res, f, indent=2)
+    write_bench("BENCH_stream.json", res)
 
 
 def serve(quick: bool):
@@ -180,8 +215,7 @@ def serve(quick: bool):
          f"blocked={res['parity']['blocked_equal']};"
          f"matched={res['parity']['matched_equal']};"
          f"pairs={res['pairs']};live={res['live_entities']}")
-    with open("BENCH_serve.json", "w") as f:
-        json.dump(res, f, indent=2)
+    write_bench("BENCH_serve.json", res)
 
 
 def resilience(quick: bool):
@@ -209,8 +243,32 @@ def resilience(quick: bool):
          f"pair_cap={rt['start_pair_cap']}->{rt['final_pair_cap']};"
          f"dropped={rt['dropped_pairs']};overflow={rt['pair_overflow']};"
          f"blocked={rt['blocked_equal']}")
-    with open("BENCH_resilience.json", "w") as f:
-        json.dump(res, f, indent=2)
+    write_bench("BENCH_resilience.json", res)
+
+
+def obs(quick: bool):
+    """Observability layer (ISSUE 8 acceptance): traced vs untraced steady
+    resolve, the deterministic disabled-path cost, zero extra retraces
+    under tracing, and per-variant streamed trace coverage.  Writes
+    BENCH_obs.json + the Chrome trace BENCH_obs_trace.json (gated by
+    perf_smoke --obs: traced overhead <= 5%, disabled <= 1%, zero extra
+    retraces, coverage >= 0.9)."""
+    from benchmarks.bench_sn import obs_body
+    res = obs_body(n=4_000 if quick else 12_000,
+                   chunk=1_000 if quick else 3_000,
+                   w=8, r=4, reps=5)
+    _row("obs_traced", res["steady_traced_seconds"] * 1e6,
+         f"untraced_us={res['steady_untraced_seconds'] * 1e6:.0f};"
+         f"overhead={res['traced_overhead']:.4f};"
+         f"spans={res['spans_per_resolve']};"
+         f"zero_retrace={res['zero_extra_retraces']}")
+    _row("obs_disabled", res["noop_span_seconds"] * 1e6,
+         f"overhead={res['disabled_overhead']:.5f}")
+    for variant, v in res["stream"].items():
+        _row(f"obs_stream_{variant}", v["wall_s"] * 1e6,
+             f"coverage={v['coverage']:.3f};spans={v['spans']};"
+             f"chunks={v['chunks']}")
+    write_bench("BENCH_obs.json", res)
 
 
 def kernels(quick: bool):
@@ -289,6 +347,7 @@ TABLES = {
     "stream": stream,
     "serve": serve,
     "resilience": resilience,
+    "obs": obs,
     "kernels": kernels,
     "dedup_e2e": dedup_e2e,
     "roofline": roofline,

@@ -48,7 +48,17 @@ Pieces (each importable on its own):
                            ``api.resume``), the ``ERConfig.on_overflow``
                            cap-escalation retry ladder, and the
                            deterministic fault-injection harness
+  * repro.obs              unified tracing + metrics (DESIGN.md §12):
+                           ``ERConfig(trace=True)`` attaches a
+                           ``TraceReport`` (spans, counters, histograms,
+                           every legacy stats type behind one schema) to
+                           any resolve/stream result, exportable as a
+                           Chrome/Perfetto ``trace.json``
 """
+# repro.obs is a leaf (stdlib/numpy only at import), so the eager import is
+# cycle-safe — unlike serve/resilience, which resolve lazily below
+from repro.obs import (SCHEMA_VERSION, TraceReport, Tracer, pack_stats,
+                       unpack_stats)
 from repro.api.config import ERConfig, SortKeySpec
 from repro.api.facade import (default_bounds, link, make_runner, resolve,
                               resume, serve)
@@ -105,4 +115,5 @@ __all__ = [
     "KeyProfile", "ShardPlan", "profile_keys", "plan_shards",
     "register_partitioner", "get_partitioner", "available_partitioners",
     "tag_sources", "sequential_link_pairs",
+    "Tracer", "TraceReport", "pack_stats", "unpack_stats", "SCHEMA_VERSION",
 ]

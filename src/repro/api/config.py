@@ -185,6 +185,17 @@ class ERConfig:
                        — passes do NOT enter ``static_fingerprint`` (each
                        pass reuses the single-pass executable; only the key
                        VALUES differ)
+
+    Observability (repro.obs — DESIGN.md §12):
+      trace            record a span/metrics ``TraceReport`` for the run
+                       and attach it as ``result.trace`` (resolve / link /
+                       resolve_stream; the serve service keeps a tracer for
+                       its lifetime and exposes ``trace_report()``).
+                       Host-side only — excluded from
+                       ``static_fingerprint``, so traced and untraced runs
+                       share executables and pair sets bit-identically
+                       (invariant 12); the disabled path costs one
+                       thread-local lookup per span site
     """
     window: int = 10
     variant: str = "repsn"
@@ -212,6 +223,8 @@ class ERConfig:
     linkage: bool = False
     compute_metrics: bool = False
     passes: Tuple[SortKeySpec, ...] = ()
+
+    trace: bool = False
 
     def __post_init__(self):
         if not isinstance(self.passes, tuple) or any(
@@ -288,7 +301,10 @@ class ERConfig:
         partitioners reuses the compiled executable (boundaries are traced
         arguments).  ``on_overflow``/``retry_limit`` are host-side recovery
         policy and excluded too: a retry re-executes under a cfg whose
-        DOUBLED caps fingerprint to their own (bucketed) entries.  Auto
+        DOUBLED caps fingerprint to their own (bucketed) entries.
+        ``trace`` is likewise excluded — spans only read host clocks
+        (invariant 12), so a traced run must HIT the very executables an
+        untraced one built.  Auto
         (None) caps are resolved to concrete ints by the facade/stream
         before any runner call, so a fingerprint with a None cap only
         arises from direct raw-runner use (where None means 0)."""

@@ -19,6 +19,7 @@ from dataclasses import replace as _replace
 import numpy as np
 
 from repro import balance as B
+from repro import obs as OBS
 from repro.api import linkage as LK
 from repro.api.config import ERConfig
 from repro.api.results import (BalanceMetrics, BlockingResult, ERResult,
@@ -95,6 +96,21 @@ def _balance_metrics(plan: B.ShardPlan, out, window: int):
         cap_link=plan.cap_link)
 
 
+def attach_trace(res, tracer):
+    """Capture ``tracer`` as a ``TraceReport`` and attach it to ``res``
+    (ERResult / MultiPassResult / StreamResult — whichever of the legacy
+    stats fields the result carries ride into the unified schema).  Pair/
+    match gauges are stamped here so every report answers pairs-per-second
+    without consulting the result object."""
+    from dataclasses import replace
+    m = tracer.metrics
+    m.gauge("pairs").set(len(res.blocking.pairs))
+    m.gauge("matches").set(len(res.matches))
+    stats = [getattr(res, f, None)
+             for f in ("balance", "perf", "stream", "resilience")]
+    return replace(res, trace=OBS.TraceReport.from_tracer(tracer, stats))
+
+
 def resolve(ents: dict, cfg: ERConfig, *, bounds=None, mesh=None,
             axis: str = "data"):
     """Run the configured ER pipeline over one entity set.
@@ -106,39 +122,60 @@ def resolve(ents: dict, cfg: ERConfig, *, bounds=None, mesh=None,
 
     Returns an ``ERResult`` — or, when ``cfg.passes`` selects multi-pass
     blocking, a ``MultiPassResult`` holding the per-pass ERResults plus the
-    union pair sets."""
+    union pair sets.  Under ``cfg.trace`` the result additionally carries a
+    ``repro.obs.TraceReport`` (``result.trace``) — unless a tracer is
+    already active on this thread, in which case the call contributes its
+    spans to that outer trace instead (multi-pass passes, stream chunks)."""
+    if cfg.trace and OBS.current_tracer() is None:
+        tracer = OBS.Tracer()
+        with OBS.activate(tracer), OBS.span(
+                "resolve", variant=cfg.variant, runner=cfg.runner,
+                window=cfg.window):
+            res = _resolve(ents, cfg, bounds=bounds, mesh=mesh, axis=axis)
+        return attach_trace(res, tracer)
+    return _resolve(ents, cfg, bounds=bounds, mesh=mesh, axis=axis)
+
+
+def _resolve(ents: dict, cfg: ERConfig, *, bounds=None, mesh=None,
+             axis: str = "data"):
+    """``resolve`` minus trace ownership (the body every caller shares)."""
     if cfg.passes:
         return _resolve_multipass(ents, cfg, bounds=bounds, mesh=mesh,
                                   axis=axis)
     runner = make_runner(cfg, mesh=mesh, axis=axis)
     n_valid = int(np.asarray(ents["valid"]).sum())
-    if bounds is None:
-        if 0 < n_valid < runner.shards:
-            # planning more shards than entities: every extra shard is
-            # guaranteed empty and halo-hop assumptions quietly break
-            raise ValueError(
-                f"num_shards={runner.shards} exceeds the entity count "
-                f"({n_valid} valid entities); lower num_shards (or shrink "
-                f"the mesh) so every shard can hold at least one entity")
-        plan = B.plan_shards(ents, cfg, runner.shards)
-    else:
-        plan = B.as_plan(bounds)
-        if cfg.runner != "sequential" and plan.num_shards != runner.shards:
-            # SRP routes each entity to partition index == shard index; a
-            # mismatch would silently drop everything past the last shard.
-            raise ValueError(
-                f"bounds define {plan.num_shards} partitions but the "
-                f"{runner.name} runner has {runner.shards} shards")
-        # the sequential runner takes its partition count from the plan, so
-        # validate against that (cfg.num_shards is not used there)
-        if 0 < n_valid < plan.num_shards:
-            raise ValueError(
-                f"bounds define {plan.num_shards} partitions but only "
-                f"{n_valid} valid entities exist; use fewer partitions")
-    # unset (None) caps resolve from the plan's profiled loads when the
-    # partitioner is profile-backed; legacy/raw-bounds plans fall back to
-    # the historical unbounded semantics (DESIGN.md §11)
-    cfg, auto_caps = RZ.autosize_caps(cfg, plan=plan)
+    with OBS.span("plan", partitioner=cfg.partitioner, n=n_valid):
+        if bounds is None:
+            if 0 < n_valid < runner.shards:
+                # planning more shards than entities: every extra shard is
+                # guaranteed empty and halo-hop assumptions quietly break
+                raise ValueError(
+                    f"num_shards={runner.shards} exceeds the entity count "
+                    f"({n_valid} valid entities); lower num_shards (or "
+                    f"shrink the mesh) so every shard can hold at least "
+                    f"one entity")
+            plan = B.plan_shards(ents, cfg, runner.shards)
+        else:
+            plan = B.as_plan(bounds)
+            if cfg.runner != "sequential" \
+                    and plan.num_shards != runner.shards:
+                # SRP routes each entity to partition index == shard index;
+                # a mismatch would silently drop everything past the last
+                # shard.
+                raise ValueError(
+                    f"bounds define {plan.num_shards} partitions but the "
+                    f"{runner.name} runner has {runner.shards} shards")
+            # the sequential runner takes its partition count from the
+            # plan, so validate against that (cfg.num_shards is unused
+            # there)
+            if 0 < n_valid < plan.num_shards:
+                raise ValueError(
+                    f"bounds define {plan.num_shards} partitions but only "
+                    f"{n_valid} valid entities exist; use fewer partitions")
+        # unset (None) caps resolve from the plan's profiled loads when the
+        # partitioner is profile-backed; legacy/raw-bounds plans fall back
+        # to the historical unbounded semantics (DESIGN.md §11)
+        cfg, auto_caps = RZ.autosize_caps(cfg, plan=plan)
     cache = PC.executable_cache()
     before = cache.stats.snapshot()
 
@@ -150,7 +187,9 @@ def resolve(ents: dict, cfg: ERConfig, *, bounds=None, mesh=None,
             else _replace(plan, cap_link=None)
         return runner.resolve(ents, p, c)
 
-    out, run_cfg, retries, escalations = RZ.run_with_recovery(_attempt, cfg)
+    with OBS.span("execute", runner=runner.name, shards=runner.shards):
+        out, run_cfg, retries, escalations = \
+            RZ.run_with_recovery(_attempt, cfg)
     dh, dm, dt = cache.stats.delta(before)
     perf = PerfStats(cache_hits=dh, cache_misses=dm, traces=dt,
                      cache_entries=len(cache))
@@ -173,15 +212,16 @@ def resolve(ents: dict, cfg: ERConfig, *, bounds=None, mesh=None,
         from dataclasses import replace
 
         from repro.api.variants import get_variant
-        if cfg.runner == "sequential" and \
-                get_variant(cfg.variant).boundary_complete:
-            oracle = set(out.blocked)     # already the full SN oracle
-        else:
-            oracle = _host_oracle(ents, cfg)
-        metrics = replace(
-            compute_metrics(out.blocked, oracle,
-                            _total_comparisons(ents, cfg)),
-            balance=balance, resilience=resilience)
+        with OBS.span("metrics"):
+            if cfg.runner == "sequential" and \
+                    get_variant(cfg.variant).boundary_complete:
+                oracle = set(out.blocked)     # already the full SN oracle
+            else:
+                oracle = _host_oracle(ents, cfg)
+            metrics = replace(
+                compute_metrics(out.blocked, oracle,
+                                _total_comparisons(ents, cfg)),
+                balance=balance, resilience=resilience)
     return ERResult(blocking=blocking, matches=out.matched, metrics=metrics,
                     balance=balance, perf=perf, resilience=resilience)
 
@@ -234,15 +274,17 @@ def _resolve_multipass(ents: dict, cfg: ERConfig, *, bounds, mesh,
     results = []
     union_oracle: set = set()
     for spec in cfg.passes:
-        pents = _rekeyed(ents, spec)
-        res = resolve(pents, sub, mesh=mesh, axis=axis)
-        if cfg.compute_metrics:
-            oracle = _host_oracle(pents, sub)
-            union_oracle |= oracle
-            res = replace(res, metrics=replace(
-                compute_metrics(res.blocking.pairs, oracle,
-                                _total_comparisons(ents, cfg)),
-                balance=res.balance))
+        with OBS.span("pass", name=spec.name, kind=spec.kind):
+            pents = _rekeyed(ents, spec)
+            res = resolve(pents, sub, mesh=mesh, axis=axis)
+            if cfg.compute_metrics:
+                with OBS.span("metrics"):
+                    oracle = _host_oracle(pents, sub)
+                    union_oracle |= oracle
+                    res = replace(res, metrics=replace(
+                        compute_metrics(res.blocking.pairs, oracle,
+                                        _total_comparisons(ents, cfg)),
+                        balance=res.balance))
         results.append(res)
     results = tuple(results)
     matches = frozenset().union(*(r.matches for r in results))
@@ -289,17 +331,18 @@ def link(lhs: dict, rhs: dict, cfg: ERConfig, *, bounds=None, mesh=None,
             ERResult(blocking=_untag_blocking(r.blocking, offset),
                      matches=frozenset(LK.untag_pairs(r.matches, offset)),
                      metrics=r.metrics, balance=r.balance, perf=r.perf,
-                     resilience=r.resilience)
+                     resilience=r.resilience, trace=r.trace)
             for r in res.passes)
         return MultiPassResult(
             passes=passes, pass_names=res.pass_names,
             blocking=_untag_blocking(res.blocking, offset),
             matches=frozenset(LK.untag_pairs(res.matches, offset)),
-            metrics=res.metrics, resilience=res.resilience)
+            metrics=res.metrics, resilience=res.resilience,
+            trace=res.trace)
     return ERResult(blocking=_untag_blocking(res.blocking, offset),
                     matches=frozenset(LK.untag_pairs(res.matches, offset)),
                     metrics=res.metrics, balance=res.balance, perf=res.perf,
-                    resilience=res.resilience)
+                    resilience=res.resilience, trace=res.trace)
 
 
 def serve(cfg: ERConfig, *, initial=None, **kwargs):

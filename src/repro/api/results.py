@@ -188,6 +188,10 @@ class ERResult:
     resilience: Optional[ResilienceStats] = None  # overflow-recovery
     #                                   telemetry (retries / escalations /
     #                                   final caps — DESIGN.md §11)
+    trace: Optional[object] = None  # repro.obs.TraceReport when the run
+    #                                 executed under ERConfig.trace=True
+    #                                 (spans + metrics + the legacy stats
+    #                                 unified — DESIGN.md §12)
 
     @property
     def pairs(self) -> FrozenSet[Pair]:
@@ -215,6 +219,8 @@ class MultiPassResult:
     matches: FrozenSet[Pair]
     metrics: Optional[ERMetrics] = None
     resilience: Optional[ResilienceStats] = None  # summed across passes
+    trace: Optional[object] = None  # repro.obs.TraceReport spanning every
+    #                                 pass (ERConfig.trace=True)
 
     @property
     def pairs(self) -> FrozenSet[Pair]:

@@ -41,6 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as OBS
 from repro.api import linkage as LK
 from repro.api import results as RES
 from repro.api.variants import get_variant
@@ -173,22 +174,38 @@ def shard_input(ents: dict, r: int) -> dict:
 
 def _device_outcome_packed(out: dict, cfg, r: int) -> PackedOutcome:
     """Stacked device output -> PackedOutcome (collection + accounting; the
-    shared back half of every device runner's resolve/resolve_packed)."""
-    variant = get_variant(cfg.variant)
-    col = variant.collect(out)
-    load = tuple(int(x) for x in np.asarray(out["load"])[0])
-    overflow = int(np.asarray(out["overflow"])[0])
-    cand_count = np.zeros(r, np.int64)
-    cand_overflow = matcher_evals = pair_overflow = 0
-    for p in variant.parts:
-        if p in out:
-            cand_count += np.asarray(out[p]["cand_count"], np.int64)
-            cand_overflow += int(np.asarray(out[p]["cand_overflow"]).sum())
-            matcher_evals += int(np.asarray(out[p]["matcher_evals"]).sum())
-            if "mask_overflow" in out[p]:     # device-side pair emission
-                pair_overflow += \
-                    int(np.asarray(out[p]["mask_overflow"]).sum()) + \
-                    int(np.asarray(out[p]["match_overflow"]).sum())
+    shared back half of every device runner's resolve/resolve_packed).
+    Under an active tracer the whole collection runs inside a ``collect``
+    span carrying the device->host transfer bytes and the realized
+    per-shard loads — the Afrati/Ullman communication-cost attribution of
+    DESIGN.md §12."""
+    sp = OBS.span("collect")
+    with sp:
+        if sp.enabled:
+            nbytes = sum(int(getattr(x, "nbytes", 0))
+                         for x in jax.tree.leaves(out))
+            sp.set(transfer_bytes=nbytes)
+            OBS.current_tracer().metrics.counter("transfer_bytes") \
+                .inc(nbytes)
+        variant = get_variant(cfg.variant)
+        col = variant.collect(out)
+        load = tuple(int(x) for x in np.asarray(out["load"])[0])
+        overflow = int(np.asarray(out["overflow"])[0])
+        cand_count = np.zeros(r, np.int64)
+        cand_overflow = matcher_evals = pair_overflow = 0
+        for p in variant.parts:
+            if p in out:
+                cand_count += np.asarray(out[p]["cand_count"], np.int64)
+                cand_overflow += \
+                    int(np.asarray(out[p]["cand_overflow"]).sum())
+                matcher_evals += \
+                    int(np.asarray(out[p]["matcher_evals"]).sum())
+                if "mask_overflow" in out[p]:  # device-side pair emission
+                    pair_overflow += \
+                        int(np.asarray(out[p]["mask_overflow"]).sum()) + \
+                        int(np.asarray(out[p]["match_overflow"]).sum())
+        if sp.enabled:
+            sp.set(load=load)
     return PackedOutcome(blocked=col.blocked, matched=col.matched,
                          load=load, overflow=overflow, num_shards=r,
                          cand_count=tuple(int(c) for c in cand_count),
@@ -226,13 +243,24 @@ class VmapRunner:
                             axis_name="sn")(st)
 
         fp = _cache_fingerprint(cfg)
-        if fp is None:
-            return program(stacked, b)       # legacy trace-per-call path
-        call = PC.executable_cache().get_or_build(
-            ("vmap", r, "sn", fp, cap_link,
-             PC.tree_fingerprint((stacked, b))),
-            lambda: program, donate_argnums=(0,))
-        return call(stacked, b)
+        rows = int(stacked["key"].shape[1])
+        sp = OBS.span("shard_program", device=True, runner="vmap",
+                      shards=r, rows_per_shard=rows)
+        with sp:
+            if fp is None:
+                out = program(stacked, b)    # legacy trace-per-call path
+            else:
+                call = PC.executable_cache().get_or_build(
+                    ("vmap", r, "sn", fp, cap_link,
+                     PC.tree_fingerprint((stacked, b))),
+                    lambda: program, donate_argnums=(0,))
+                out = call(stacked, b)
+            if sp.enabled:
+                # async dispatch would end the span before the device ran;
+                # blocking only when traced keeps the untraced path
+                # identical (invariant 12: no retraces, same pair sets)
+                out = jax.block_until_ready(out)
+        return out
 
     def resolve(self, ents: dict, bounds, cfg) -> RunnerOutcome:
         """Run blocking + matching on r vmapped shards; see ``Runner``."""
@@ -303,13 +331,21 @@ class ShardMapRunner:
                 out_specs=out_specs, check_rep=False)
 
         fp = _cache_fingerprint(cfg)
-        if fp is None:
-            return make_program()(stacked, b)    # legacy per-call path
-        call = PC.executable_cache().get_or_build(
-            ("shard_map", axis, self.mesh, fp,
-             cap_link, PC.tree_fingerprint((stacked, b))),
-            make_program, donate_argnums=(0,))
-        return call(stacked, b)
+        rows = int(stacked["key"].shape[1])
+        sp = OBS.span("shard_program", device=True, runner="shard_map",
+                      shards=r, rows_per_shard=rows)
+        with sp:
+            if fp is None:
+                out = make_program()(stacked, b)   # legacy per-call path
+            else:
+                call = PC.executable_cache().get_or_build(
+                    ("shard_map", axis, self.mesh, fp,
+                     cap_link, PC.tree_fingerprint((stacked, b))),
+                    make_program, donate_argnums=(0,))
+                out = call(stacked, b)
+            if sp.enabled:
+                out = jax.block_until_ready(out)  # see VmapRunner.run_raw
+        return out
 
     def resolve(self, ents: dict, bounds, cfg) -> RunnerOutcome:
         """Run blocking + matching on the mesh shards; see ``Runner``."""
@@ -350,12 +386,15 @@ class SequentialRunner:
         # partition ids under the plan (rank-granular when it carries dest)
         part = plan.assignment(np.asarray(ents["key"]), valid)
 
-        blocked = RES.pack_pair_set(get_variant(cfg.variant).sequential_pairs(
-            keys, eids, bounds, cfg.window, part=part))
-        if getattr(cfg, "linkage", False) and "src" in ents["payload"]:
-            src = np.asarray(ents["payload"]["src"])[valid]
-            blocked = LK.filter_cross_source_packed(blocked, eids, src)
-        matched = self._match(ents, blocked, cfg)
+        with OBS.span("block", runner="sequential", shards=r):
+            blocked = RES.pack_pair_set(
+                get_variant(cfg.variant).sequential_pairs(
+                    keys, eids, bounds, cfg.window, part=part))
+            if getattr(cfg, "linkage", False) and "src" in ents["payload"]:
+                src = np.asarray(ents["payload"]["src"])[valid]
+                blocked = LK.filter_cross_source_packed(blocked, eids, src)
+        with OBS.span("match", pairs=int(blocked.size)):
+            matched = self._match(ents, blocked, cfg)
 
         load = tuple(np.bincount(part, minlength=r).astype(int).tolist())
         return PackedOutcome(blocked=blocked, matched=matched,

@@ -27,6 +27,7 @@ from typing import Callable, NamedTuple, Optional, Tuple
 import numpy as np
 
 from repro import balance as B
+from repro import obs as OBS
 
 
 class CapacityOverflowError(RuntimeError):
@@ -100,8 +101,30 @@ def run_with_recovery(call: Callable, cfg):
     Returns ``(outcome, cfg_used, retries, escalations)`` where ``cfg_used``
     is the (possibly escalated) config of the kept execution.  Raises
     ``CapacityOverflowError`` under policy "raise" (immediately) or "retry"
-    (after ``cfg.retry_limit`` fruitless rounds)."""
-    out = call(cfg, 0)
+    (after ``cfg.retry_limit`` fruitless rounds).
+
+    Under an active tracer every ladder rung runs inside an ``attempt``
+    child span (attempt index, the caps it ran under, whether it
+    overflowed), and retries/overflow events land on the tracer's
+    counters — the DESIGN.md §12 view of the recovery ladder."""
+
+    def _call(c, attempt: int):
+        sp = OBS.span("attempt", attempt=attempt,
+                      cand_cap=getattr(c, "cand_cap", 0) or 0,
+                      pair_cap=getattr(c, "pair_cap", 0) or 0)
+        with sp:
+            o = call(c, attempt)
+            if sp.enabled:
+                over = _overflowed(o)
+                sp.set(overflowed=over)
+                m = OBS.current_tracer().metrics
+                if over:
+                    m.counter("overflow_events").inc()
+                if attempt > 0:
+                    m.counter("retries").inc()
+        return o
+
+    out = _call(cfg, 0)
     if cfg.on_overflow == "count" or not _overflowed(out):
         return out, cfg, 0, 0
     if cfg.on_overflow == "raise":
@@ -121,7 +144,7 @@ def run_with_recovery(call: Callable, cfg):
         cfg = nxt
         retries += 1
         escalations += doublings
-        out = call(cfg, retries)
+        out = _call(cfg, retries)
     if _overflowed(out):
         raise CapacityOverflowError(
             f"capacity overflow survived {retries} retry escalation(s) "

@@ -31,12 +31,12 @@ import os
 import queue
 import threading
 import time
-from collections import deque
 from concurrent.futures import Future
 from typing import Dict, FrozenSet, NamedTuple, Optional, Tuple
 
 import numpy as np
 
+from repro import obs as OBS
 from repro.api import results as RES
 from repro.api.variants import get_variant
 from repro.core import entities as E
@@ -159,7 +159,15 @@ class ResolutionService:
         self._served_m = _EMPTY
         self._pair_ids: Dict[int, int] = {}     # packed pair -> stable id
         self._lock = threading.Lock()
-        self._latency = deque(maxlen=2048)      # seconds, sliding window
+        # submit-to-result latencies (seconds) over a bounded sliding
+        # window — the obs ring buffer keeps the historical deque's
+        # percentile semantics bit-for-bit (DESIGN.md §12)
+        self._latency = OBS.Histogram("latency_s", 2048)
+        # per-batch spans accumulate here when the config asks for
+        # tracing; the service owns its tracer for its whole lifetime
+        # (batches arrive forever — there is no single "run" to scope it)
+        self._tracer = OBS.Tracer() if getattr(cfg, "trace", False) \
+            else None
         self._requests = 0
         self._batches = 0
         self._steady = 0
@@ -289,6 +297,18 @@ class ResolutionService:
                 nxt.future.set_exception(exc)
 
     def _apply_batch(self, group) -> IncrementalResult:
+        if self._tracer is None:
+            return self._apply_batch_inner(group)
+        t0 = time.perf_counter()
+        with OBS.activate(self._tracer), OBS.span(
+                "batch", kind=group[0].kind, requests=len(group),
+                entities=sum(r.n for r in group)):
+            result = self._apply_batch_inner(group)
+        self._tracer.metrics.histogram("batch_ms").observe(
+            1e3 * (time.perf_counter() - t0))
+        return result
+
+    def _apply_batch_inner(self, group) -> IncrementalResult:
         kind = group[0].kind
         with self._lock:
             cache = PC.executable_cache()
@@ -340,7 +360,7 @@ class ResolutionService:
                 ids[(packed >> 32, packed & 0xFFFFFFFF)] = pid
             now = time.perf_counter()
             for r in group:
-                self._latency.append(now - r.t0)
+                self._latency.observe(now - r.t0)
             stats = self._stats_locked()
         return IncrementalResult(
             new_pairs=RES.packed_to_frozenset(new_p),
@@ -378,10 +398,7 @@ class ResolutionService:
         return self._pair_ids[(int(pair[0]) << 32) | int(pair[1])]
 
     def _stats_locked(self) -> ServeStats:
-        lat = sorted(self._latency)
-        pct = (lambda p: 1e3 * lat[min(len(lat) - 1,
-                                       int(p * (len(lat) - 1)))]) \
-            if lat else (lambda p: 0.0)
+        pct = lambda p: 1e3 * self._latency.percentile(p)
         return ServeStats(
             requests=self._requests, batches=self._batches,
             steady_batches=self._steady,
@@ -403,6 +420,19 @@ class ResolutionService:
         """Current telemetry snapshot."""
         with self._lock:
             return self._stats_locked()
+
+    def trace_report(self) -> Optional["OBS.TraceReport"]:
+        """A ``repro.obs.TraceReport`` over every micro-batch served so
+        far (one ``batch`` span per batch, the bounded ``batch_ms``
+        latency histogram, and the current ``ServeStats`` behind the
+        unified schema).  Requires the service config to carry
+        ``trace=True``; returns None otherwise.  Can be called repeatedly
+        — each call snapshots the tracer's current state."""
+        if self._tracer is None:
+            return None
+        with self._lock:
+            return OBS.TraceReport.from_tracer(self._tracer,
+                                               (self._stats_locked(),))
 
     # -- durability ----------------------------------------------------------
 

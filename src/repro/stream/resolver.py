@@ -42,12 +42,14 @@ of ``facade.resolve``'s ``MultiPassResult``.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, replace
 from typing import FrozenSet, Iterable, Optional, Set, Tuple
 
 import numpy as np
 
 from repro import balance as B
+from repro import obs as OBS
 from repro.api import facade as F
 from repro.api import linkage as LK
 from repro.api import results as RES
@@ -128,6 +130,10 @@ class StreamResult:
     # and the caps the final executions ran under; multi-pass unions sum
     # the counters across passes
     resilience: Optional[RZ.ResilienceStats] = None
+    # repro.obs.TraceReport when the run executed under ERConfig.trace=True
+    # (DESIGN.md §12); per-pass results share the owner's tracer and carry
+    # no report of their own
+    trace: Optional[object] = None
 
     @property
     def pairs(self) -> FrozenSet[Pair]:
@@ -257,31 +263,46 @@ def _stream_pass(raw: ChunkStore, cfg: ERConfig, spec, chunk_size: int,
     skipped in the (deterministic) merged stream, their pairs reloaded
     from the spool, the carry/rank/counters restored.  ``fault`` is the
     test-only ``FaultPlan`` crash injector."""
+    with OBS.span("pass", name=label, variant=cfg.variant):
+        return _stream_pass_body(raw, cfg, spec, chunk_size, runner,
+                                 spool_dir, label, total_comparisons,
+                                 ckpt=ckpt, fault=fault)
+
+
+def _stream_pass_body(raw: ChunkStore, cfg: ERConfig, spec,
+                      chunk_size: int, runner, spool_dir: Optional[str],
+                      label: str, total_comparisons: int, *,
+                      ckpt=None, fault=None):
+    """``_stream_pass`` proper (the wrapper above only opens the pass's
+    root span so every phase below nests under it)."""
     w, r = cfg.window, runner.shards
     variant = get_variant(cfg.variant)
-    if ckpt is not None:
-        runs, sorted_done = ckpt.runs_store(label)
-        if sorted_done:
-            profile = ckpt.load_profile(label)
+    with OBS.span("sort_runs"):
+        if ckpt is not None:
+            runs, sorted_done = ckpt.runs_store(label)
+            if sorted_done:
+                profile = ckpt.load_profile(label)
+            else:
+                runs, profile = _sorted_runs(raw, spec, w, None, label,
+                                             runs=runs)
+                ckpt.commit_sorted(label, runs, profile)
         else:
-            runs, profile = _sorted_runs(raw, spec, w, None, label,
-                                         runs=runs)
-            ckpt.commit_sorted(label, runs, profile)
-    else:
-        runs, profile = _sorted_runs(raw, spec, w, spool_dir, label)
-    gplan = B.plan_from_profile(profile, cfg.partitioner, r)
-    # config-level feasibility is judged ONCE, against the global plan —
-    # exactly what the monolithic facade would reject (halo-truncating
-    # hops/window/shard combinations fail the stream loudly, not as a
-    # silent cascade of collapsed chunks)
-    B.validate_plan(gplan, cfg, profile.n)
+            runs, profile = _sorted_runs(raw, spec, w, spool_dir, label)
+    with OBS.span("plan", partitioner=cfg.partitioner, n=profile.n):
+        gplan = B.plan_from_profile(profile, cfg.partitioner, r)
+        # config-level feasibility is judged ONCE, against the global
+        # plan — exactly what the monolithic facade would reject (halo-
+        # truncating hops/window/shard combinations fail the stream
+        # loudly, not as a silent cascade of collapsed chunks)
+        B.validate_plan(gplan, cfg, profile.n)
 
-    combined_cap = (w - 1) + chunk_size
-    # unset (None) caps resolve from the merged profile's planned loads —
-    # floored at the combined chunk width, since a degenerate (collapsed)
-    # chunk puts the whole [halo | chunk] window on one shard
-    cfg, auto_caps = RZ.autosize_caps(cfg, plan=gplan, profile=profile,
-                                      r=r, floor_load=combined_cap)
+        combined_cap = (w - 1) + chunk_size
+        # unset (None) caps resolve from the merged profile's planned
+        # loads — floored at the combined chunk width, since a degenerate
+        # (collapsed) chunk puts the whole [halo | chunk] window on one
+        # shard
+        cfg, auto_caps = RZ.autosize_caps(cfg, plan=gplan, profile=profile,
+                                          r=r, floor_load=combined_cap)
     cache = PC.executable_cache()
     blocked_parts, matched_parts = [], []
     load_max = np.zeros(r, np.int64)
@@ -325,83 +346,111 @@ def _stream_pass(raw: ChunkStore, cfg: ERConfig, spec, chunk_size: int,
     # shape instead of re-climbing the ladder per chunk
     run_cfg = cfg
     ci = -1
-    for native in rechunk(merged_blocks(runs, chunk_size), chunk_size):
+    # the merge is pulled through ``next`` by hand (rather than a plain
+    # ``for``) so the k-way merge's own time lands in ``merge`` spans,
+    # separate from the ``chunk`` resolve spans it feeds
+    merged = iter(rechunk(merged_blocks(runs, chunk_size), chunk_size))
+    while True:
+        with OBS.span("merge"):
+            native = next(merged, None)
+        if native is None:
+            break
         ci += 1
         if ci < completed:
             continue   # fast-forward: committed by a previous (killed) run
-        n_nat = int(native["key"].shape[0])
-        combined = native if carry is None else \
-            E.host_concat([carry, native])
-        n_comb = int(combined["key"].shape[0])
-        n_carry = n_comb - n_nat
-        padded = _host_pad(combined, combined_cap)
-        dev = E.make_entities(padded["key"], padded["eid"],
-                              payload=padded["payload"],
-                              valid=padded["valid"])
-        ranks = np.arange(rank_offset - n_carry, rank_offset + n_nat,
-                          dtype=np.int64)
-        plan, degen = _chunk_plan(cfg, variant, gplan, dev, padded, ranks, r)
+        csp = OBS.span("chunk", index=ci)
+        with csp:
+            n_nat = int(native["key"].shape[0])
+            combined = native if carry is None else \
+                E.host_concat([carry, native])
+            n_comb = int(combined["key"].shape[0])
+            n_carry = n_comb - n_nat
+            padded = _host_pad(combined, combined_cap)
+            dev = E.make_entities(padded["key"], padded["eid"],
+                                  payload=padded["payload"],
+                                  valid=padded["valid"])
+            ranks = np.arange(rank_offset - n_carry, rank_offset + n_nat,
+                              dtype=np.int64)
+            plan, degen = _chunk_plan(cfg, variant, gplan, dev, padded,
+                                      ranks, r)
+            if csp.enabled:
+                csp.set(natives=n_nat, carry=n_carry,
+                        degenerate=bool(degen))
+                OBS.current_tracer().metrics.counter(
+                    "carry_entities").inc(n_carry)
 
-        before = cache.stats.snapshot()
-        po, run_cfg, rt, esc = RZ.run_with_recovery(
-            lambda c, attempt: runner.resolve_packed(dev, plan, c), run_cfg)
-        retries, escalations = retries + rt, escalations + esc
-        dh, dm, dt = cache.stats.delta(before)
-        hits, misses, traces = hits + dh, misses + dm, traces + dt
-        steady += int(dh > 0 and dm == 0 and dt == 0)
-        degenerate += int(degen)
+            before = cache.stats.snapshot()
+            po, run_cfg, rt, esc = RZ.run_with_recovery(
+                lambda c, attempt: runner.resolve_packed(dev, plan, c),
+                run_cfg)
+            retries, escalations = retries + rt, escalations + esc
+            dh, dm, dt = cache.stats.delta(before)
+            hits, misses, traces = hits + dh, misses + dm, traces + dt
+            steady += int(dh > 0 and dm == 0 and dt == 0)
+            degenerate += int(degen)
 
-        blocked_parts.append(po.blocked)
-        matched_parts.append(po.matched)
-        load_max = np.maximum(load_max, np.asarray(po.load, np.int64))
-        if po.cand_count:
-            cand_max = np.maximum(cand_max,
-                                  np.asarray(po.cand_count, np.int64))
-        overflow += po.overflow
-        cand_overflow += po.cand_overflow
-        matcher_evals += po.matcher_evals
-        pair_overflow += po.pair_overflow
-        device_bytes = max(device_bytes,
-                           _entity_bytes(padded) + 4 * combined_cap)
+            blocked_parts.append(po.blocked)
+            matched_parts.append(po.matched)
+            load_max = np.maximum(load_max, np.asarray(po.load, np.int64))
+            if po.cand_count:
+                cand_max = np.maximum(cand_max,
+                                      np.asarray(po.cand_count, np.int64))
+            overflow += po.overflow
+            cand_overflow += po.cand_overflow
+            matcher_evals += po.matcher_evals
+            pair_overflow += po.pair_overflow
+            device_bytes = max(device_bytes,
+                               _entity_bytes(padded) + 4 * combined_cap)
 
-        if oracle is not None:
-            # the FULL sequential-SN oracle, accumulated chunk-wise (each
-            # combined slice is contiguous in the global order, so chunk
-            # oracles union to the global one) — deliberately NOT the
-            # variant-faithful set: like facade._host_oracle, the metric
-            # must EXPOSE SRP's missed boundary pairs, not absolve them
-            pairs = sn.sequential_sn_pairs(combined["key"],
-                                           combined["eid"], w)
-            if cfg.linkage and "src" in combined["payload"]:
-                pairs = LK.filter_cross_source(
-                    pairs, combined["eid"], combined["payload"]["src"])
-            oracle |= pairs
+            if oracle is not None:
+                # the FULL sequential-SN oracle, accumulated chunk-wise
+                # (each combined slice is contiguous in the global order,
+                # so chunk oracles union to the global one) — deliberately
+                # NOT the variant-faithful set: like facade._host_oracle,
+                # the metric must EXPOSE SRP's missed boundary pairs, not
+                # absolve them
+                pairs = sn.sequential_sn_pairs(combined["key"],
+                                               combined["eid"], w)
+                if cfg.linkage and "src" in combined["payload"]:
+                    pairs = LK.filter_cross_source(
+                        pairs, combined["eid"], combined["payload"]["src"])
+                oracle |= pairs
 
-        chunks += 1
-        carry_total += n_carry
-        keep = min(w - 1, n_comb)
-        carry = E.host_take(combined, slice(n_comb - keep, n_comb))
-        rank_offset += n_nat
+            chunks += 1
+            carry_total += n_carry
+            keep = min(w - 1, n_comb)
+            carry = E.host_take(combined, slice(n_comb - keep, n_comb))
+            rank_offset += n_nat
 
-        if ckpt is not None:
-            # commit protocol (checkpoint module doc): pair spool, then
-            # seam halo + manifest — the manifest write is the commit point
-            ckpt.spool_chunk(label, ci, po.blocked, po.matched)
-            if fault is not None:
-                fault.before_commit(label, ci)
-            ckpt.commit_chunk(
-                label, carry, rank_offset=rank_offset, chunks=chunks,
-                carry_total=carry_total, degenerate=degenerate,
-                steady=steady, hits=hits, misses=misses, traces=traces,
-                overflow=int(overflow), cand_overflow=int(cand_overflow),
-                matcher_evals=int(matcher_evals),
-                pair_overflow=int(pair_overflow),
-                retries=retries, escalations=escalations,
-                device_bytes=int(device_bytes),
-                load_max=[int(x) for x in load_max],
-                cand_max=[int(x) for x in cand_max])
-            if fault is not None:
-                fault.after_commit(label, ci)
+            if ckpt is not None:
+                # commit protocol (checkpoint module doc): pair spool,
+                # then seam halo + manifest — the manifest write is the
+                # commit point
+                t0 = time.perf_counter()
+                sp = OBS.span("checkpoint_commit", chunk=ci)
+                with sp:
+                    ckpt.spool_chunk(label, ci, po.blocked, po.matched)
+                    if fault is not None:
+                        fault.before_commit(label, ci)
+                    ckpt.commit_chunk(
+                        label, carry, rank_offset=rank_offset,
+                        chunks=chunks, carry_total=carry_total,
+                        degenerate=degenerate, steady=steady, hits=hits,
+                        misses=misses, traces=traces,
+                        overflow=int(overflow),
+                        cand_overflow=int(cand_overflow),
+                        matcher_evals=int(matcher_evals),
+                        pair_overflow=int(pair_overflow),
+                        retries=retries, escalations=escalations,
+                        device_bytes=int(device_bytes),
+                        load_max=[int(x) for x in load_max],
+                        cand_max=[int(x) for x in cand_max])
+                if sp.enabled:
+                    OBS.current_tracer().metrics.histogram(
+                        "checkpoint_commit_ms").observe(
+                            1e3 * (time.perf_counter() - t0))
+                if fault is not None:
+                    fault.after_commit(label, ci)
 
     dedup = lambda parts: np.unique(np.concatenate(parts)) if parts \
         else np.empty((0,), RES.PACKED_DTYPE)
@@ -520,7 +569,33 @@ def resolve_stream(chunks: Iterable[dict], cfg: ERConfig, *,
     ``on_overflow="retry"`` re-executes overflowed chunks instead).
 
     Returns a ``StreamResult``; with ``cfg.passes`` the top level holds the
-    multi-pass union and ``result.passes`` the per-pass results."""
+    multi-pass union and ``result.passes`` the per-pass results.  Under
+    ``cfg.trace`` the result additionally carries a ``repro.obs``
+    ``TraceReport`` (root ``stream`` span over ingest / per-pass sort,
+    merge, chunk, and checkpoint-commit child spans — DESIGN.md §12)."""
+    if cfg.trace and OBS.current_tracer() is None:
+        tracer = OBS.Tracer()
+        with OBS.activate(tracer), OBS.span(
+                "stream", variant=cfg.variant, runner=cfg.runner,
+                window=cfg.window):
+            res = _resolve_stream(chunks, cfg, chunk_size=chunk_size,
+                                  mesh=mesh, axis=axis, spool_dir=spool_dir,
+                                  checkpoint_dir=checkpoint_dir,
+                                  fault_plan=fault_plan)
+        return F.attach_trace(res, tracer)
+    return _resolve_stream(chunks, cfg, chunk_size=chunk_size, mesh=mesh,
+                           axis=axis, spool_dir=spool_dir,
+                           checkpoint_dir=checkpoint_dir,
+                           fault_plan=fault_plan)
+
+
+def _resolve_stream(chunks: Iterable[dict], cfg: ERConfig, *,
+                    chunk_size: Optional[int], mesh, axis: str,
+                    spool_dir: Optional[str],
+                    checkpoint_dir: Optional[str],
+                    fault_plan) -> StreamResult:
+    """``resolve_stream`` minus the owner-tracer wrapper (the body runs
+    inside the ambient ``stream`` span when tracing is on)."""
     if checkpoint_dir is not None:
         from repro.resilience.checkpoint import StreamCheckpoint
         ckpt = StreamCheckpoint.open(checkpoint_dir, cfg, chunk_size)
@@ -529,7 +604,8 @@ def resolve_stream(chunks: Iterable[dict], cfg: ERConfig, *,
     if fault_plan is not None:
         raise ValueError("fault_plan injects crashes at checkpoint commit "
                          "seams and requires checkpoint_dir")
-    raw, max_len, total, nbytes = _ingest(chunks, spool_dir)
+    with OBS.span("ingest"):
+        raw, max_len, total, nbytes = _ingest(chunks, spool_dir)
     return _resolve_ingested(raw, max_len, total, nbytes, cfg,
                              chunk_size=chunk_size, mesh=mesh, axis=axis,
                              spool_dir=spool_dir)
@@ -582,7 +658,8 @@ def _resolve_checkpointed(chunks: Optional[Iterable[dict]], cfg: ERConfig,
                 f"({ckpt.ingest['chunks']} chunks committed); resuming "
                 f"needs the original chunk iterator re-supplied via "
                 f"chunks=...")
-        _ingest_checkpointed(chunks, raw, ckpt)
+        with OBS.span("ingest"):
+            _ingest_checkpointed(chunks, raw, ckpt)
         ckpt.ingest_done()
     ing = ckpt.ingest
     res = _resolve_ingested(raw, ing["max_len"], ing["total"],
@@ -666,8 +743,27 @@ def link_stream(lhs_chunks: Iterable[dict], rhs_chunks: Iterable[dict],
     store — lhs first, because its maximum eid fixes the id-space offset
     rhs entities are shifted by, exactly like ``linkage.tag_sources``.
     Pairs come back untagged as (lhs_eid, rhs_eid) in each source's
-    original id space.  Everything else matches ``resolve_stream``."""
+    original id space.  Everything else matches ``resolve_stream``,
+    including the ``cfg.trace`` TraceReport."""
     cfg = cfg.with_(linkage=True)
+    if cfg.trace and OBS.current_tracer() is None:
+        tracer = OBS.Tracer()
+        with OBS.activate(tracer), OBS.span(
+                "stream", variant=cfg.variant, runner=cfg.runner,
+                linkage=True):
+            res = _link_stream(lhs_chunks, rhs_chunks, cfg,
+                               chunk_size=chunk_size, mesh=mesh, axis=axis,
+                               spool_dir=spool_dir)
+        return F.attach_trace(res, tracer)
+    return _link_stream(lhs_chunks, rhs_chunks, cfg, chunk_size=chunk_size,
+                        mesh=mesh, axis=axis, spool_dir=spool_dir)
+
+
+def _link_stream(lhs_chunks: Iterable[dict], rhs_chunks: Iterable[dict],
+                 cfg: ERConfig, *, chunk_size: Optional[int], mesh,
+                 axis: str, spool_dir: Optional[str]) -> StreamResult:
+    """``link_stream`` minus the owner-tracer wrapper (``cfg`` arrives with
+    ``linkage`` already set)."""
     store = ChunkStore(spool_dir, prefix="raw")
     max_eid = -1
 
@@ -692,12 +788,14 @@ def link_stream(lhs_chunks: Iterable[dict], rhs_chunks: Iterable[dict],
             return h
         return transform
 
-    _, len_l, total_l, bytes_l = _ingest(lhs_chunks, spool_dir,
-                                         store=store, transform=tagger(0, 0))
-    offset = max_eid + 1
-    _, len_r, total_r, bytes_r = _ingest(rhs_chunks, spool_dir,
-                                         store=store,
-                                         transform=tagger(1, offset))
+    with OBS.span("ingest"):
+        _, len_l, total_l, bytes_l = _ingest(lhs_chunks, spool_dir,
+                                             store=store,
+                                             transform=tagger(0, 0))
+        offset = max_eid + 1
+        _, len_r, total_r, bytes_r = _ingest(rhs_chunks, spool_dir,
+                                             store=store,
+                                             transform=tagger(1, offset))
     max_len = max(len_l, len_r)
     total = total_l + total_r
     nbytes = bytes_l + bytes_r

@@ -28,6 +28,7 @@ PUBLIC_MODULES = sorted(
      *(REPO / "src/repro/stream").glob("*.py"),
      *(REPO / "src/repro/serve").glob("*.py"),
      *(REPO / "src/repro/resilience").glob("*.py"),
+     *(REPO / "src/repro/obs").glob("*.py"),
      REPO / "src/repro/perf/cache.py"])
 
 DOC_FILES = check_docs.default_doc_files()

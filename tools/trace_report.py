@@ -1,0 +1,150 @@
+"""Human-readable summary of a ``repro.obs`` Chrome trace.json.
+
+Usage:  python tools/trace_report.py trace.json [--top N] [--json]
+
+Reads a trace written by ``TraceReport.export_chrome`` /
+``Tracer.export_chrome`` and prints the run's observability digest:
+
+  * top spans by SELF time (inclusive duration minus direct children) —
+    where the wall clock actually went, not double-counted through the
+    nesting;
+  * throughput: blocked pairs per second (the ``pairs`` gauge over the
+    root span's wall);
+  * executable-cache hit rate, shard imbalance, and overflow/retry event
+    counts, pulled from whichever legacy stats blocks
+    (``PerfStats``/``BalanceMetrics``/``StreamStats``/``ServeStats``/
+    ``ResilienceStats``) the run embedded under the ``"repro"`` key.
+
+``--json`` emits the digest as JSON instead (CI archives that form).
+The span tree is rebuilt from the ``index``/``parent`` entries each
+event's ``args`` carries, so the tool needs only the trace file — not
+the repro package or the original run.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import defaultdict
+
+
+def load_trace(path: str) -> dict:
+    """Parse one trace.json; raises SystemExit with a clear message on a
+    file that is not a repro obs trace."""
+    with open(path) as f:
+        doc = json.load(f)
+    if "traceEvents" not in doc:
+        raise SystemExit(f"{path}: no traceEvents — not a Chrome trace")
+    return doc
+
+
+def self_times(events: list) -> list:
+    """[(name, self_seconds, count)] sorted by descending self time,
+    reconstructed from the ``index``/``parent`` args (falls back to
+    inclusive durations when a trace lacks them)."""
+    spans = [e for e in events if e.get("ph") == "X"]
+    child_sum: dict = defaultdict(float)
+    indexed = all("index" in (e.get("args") or {}) for e in spans)
+    if indexed:
+        for e in spans:
+            a = e["args"]
+            if a.get("parent", -1) >= 0:
+                child_sum[a["parent"]] += e["dur"]
+    agg: dict = defaultdict(lambda: [0.0, 0])
+    for e in spans:
+        own = e["dur"] - child_sum.get(e["args"]["index"], 0.0) \
+            if indexed else e["dur"]
+        entry = agg[e["name"]]
+        entry[0] += max(0.0, own) * 1e-6      # µs -> s
+        entry[1] += 1
+    return sorted(((k, v[0], v[1]) for k, v in agg.items()),
+                  key=lambda t: -t[1])
+
+
+def _stat(repro: dict, kind: str) -> dict:
+    return (repro.get("stats") or {}).get(kind) or {}
+
+
+def digest(doc: dict, top: int) -> dict:
+    """The summary dict the CLI renders: top self-time spans, pairs/s,
+    cache hit rate, imbalance, and overflow/retry events."""
+    events = doc["traceEvents"]
+    repro = doc.get("repro") or {}
+    metrics = repro.get("metrics") or {}
+    wall = float(repro.get("wall_s") or 0.0)
+    out: dict = {
+        "schema_version": repro.get("schema_version"),
+        "wall_s": wall,
+        "spans": len([e for e in events if e.get("ph") == "X"]),
+        "top_self_time": [
+            {"name": n, "self_s": round(s, 6), "count": c}
+            for n, s, c in self_times(events)[:top]],
+    }
+    pairs = (metrics.get("pairs") or {}).get("value")
+    if pairs is not None and wall > 0:
+        out["pairs"] = int(pairs)
+        out["pairs_per_s"] = pairs / wall
+    perf = _stat(repro, "PerfStats")
+    stream = _stat(repro, "StreamStats")
+    serve = _stat(repro, "ServeStats")
+    hits = sum(int(d.get("cache_hits", 0)) for d in (perf, stream, serve))
+    misses = sum(int(d.get("cache_misses", 0))
+                 for d in (perf, stream, serve))
+    if hits + misses:
+        out["cache_hit_rate"] = hits / (hits + misses)
+        out["traces"] = sum(int(d.get("traces", 0))
+                            for d in (perf, stream, serve))
+    bal = _stat(repro, "BalanceMetrics")
+    if bal.get("imbalance") is not None:
+        out["imbalance"] = bal["imbalance"]
+    rz = _stat(repro, "ResilienceStats")
+    if rz:
+        out["retries"] = rz.get("retries", 0)
+        out["escalations"] = rz.get("escalations", 0)
+    for key in ("overflow_events", "retries", "carry_entities"):
+        if key in metrics and metrics[key].get("type") == "counter":
+            out.setdefault(key, metrics[key]["value"])
+    return out
+
+
+def render(d: dict) -> str:
+    """Fixed-width text rendering of one digest."""
+    lines = [f"trace: {d['spans']} spans over {d['wall_s']:.3f}s "
+             f"(schema v{d['schema_version']})"]
+    lines.append("top spans by self time:")
+    for row in d["top_self_time"]:
+        lines.append(f"  {row['name']:<20} {row['self_s']:>10.4f}s  "
+                     f"x{row['count']}")
+    if "pairs_per_s" in d:
+        lines.append(f"pairs: {d['pairs']} ({d['pairs_per_s']:.0f}/s)")
+    if "cache_hit_rate" in d:
+        lines.append(f"executable cache: {100 * d['cache_hit_rate']:.1f}% "
+                     f"hit rate, {d['traces']} trace(s)")
+    if "imbalance" in d:
+        lines.append(f"shard imbalance: {d['imbalance']:.3f}")
+    if "retries" in d or "overflow_events" in d:
+        lines.append(f"recovery: {d.get('retries', 0)} retries, "
+                     f"{d.get('escalations', 0)} escalations, "
+                     f"{d.get('overflow_events', 0)} overflow event(s)")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    """CLI entry point (returns the process exit status)."""
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="trace.json written by export_chrome")
+    ap.add_argument("--top", type=int, default=10,
+                    help="span names to list by self time (default 10)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the digest as JSON instead of text")
+    args = ap.parse_args(argv)
+    d = digest(load_trace(args.trace), args.top)
+    try:
+        print(json.dumps(d, indent=2) if args.json else render(d))
+    except BrokenPipeError:      # downstream (head, a closed pager) left —
+        return 0                 # the digest succeeded; don't fail the job
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
