@@ -37,6 +37,16 @@ stays as an alias of ``steady_seconds`` for downstream readers.
                            (inserts/s, p50/p95 latency, zero-retrace steady
                            state, final parity vs from-scratch resolve) —
                            the BENCH_serve.json baseline
+  * overload_body        — overload hardening (ISSUE 9): an open-loop load
+                           generator driving a ResolutionService at 1x/2x/5x
+                           its measured warm capacity under a ChaosPlan
+                           (latency spikes + injected matcher errors) with
+                           queue_policy=shed_oldest and per-request
+                           deadlines; every future is accounted (ok / shed /
+                           expired / chaos error — zero hung, zero silent
+                           drops), goodput and p95/p99 latency per rate, and
+                           post-pressure ``repair()`` restores bit-parity —
+                           the BENCH_overload.json baseline
   * resilience_body      — fault tolerance (ISSUE 7): checkpointed stream
                            overhead vs plain streaming, kill/resume wall
                            time + parity, overflow-retry zero-dropped-pairs
@@ -552,6 +562,168 @@ def serve_body(n: int = 50_000, w: int = 10, n_keys: int = 4096,
             "matched_equal": svc.matches == ref.matches,
         },
     }
+
+
+def overload_body(n: int = 6_000, w: int = 8, n_keys: int = 1024,
+                  r: int = 4, batch: int = 120, ops: int = 24,
+                  warm: int = 5, rates=(1.0, 2.0, 5.0),
+                  queue_cap: int = 8, spike_s: float = 0.03,
+                  hung_timeout_s: float = 120.0) -> dict:
+    """Overload-hardened serving (ISSUE 9 acceptance).
+
+    Bootstraps a ``ResolutionService`` under ``queue_policy=shed_oldest``
+    with per-request deadlines and a ``ChaosPlan`` injecting latency
+    spikes and matcher errors at fixed dispatch indices, measures the
+    warm per-batch capacity with ``warm`` synchronous inserts, then runs
+    one OPEN-LOOP submission phase per rate multiplier: ``ops`` requests
+    paced at ``rate`` times capacity, submitted without waiting (a delete
+    of ``batch // 4`` base entities every 5th op).  ``max_batch=batch``
+    pins one request per micro-batch so the capacity ceiling is exact and
+    5x arrival strictly exceeds it — the queue MUST fill and the policy
+    MUST engage.
+
+    Every submitted future is then accounted exactly once: ``ok``
+    (applied), ``shed`` (OverloadError), ``expired``
+    (DeadlineExceededError), ``chaos_errors`` (InjectedFault), ``hung``
+    (not settled within ``hung_timeout_s``) or ``unexpected`` — the
+    structural gates (perf_smoke ``check_overload``) require zero hung
+    and zero unexpected at EVERY rate, the policy engaged (shed +
+    expired + degraded > 0) at the top rate, and bit-parity of the
+    served sets after ``repair()`` against a from-scratch resolve of
+    exactly the mutations whose futures succeeded."""
+    import jax
+    from concurrent.futures import TimeoutError as FutTimeout
+    from repro import api
+    from repro.core import entities as E
+    from repro.perf.cache import executable_cache
+    from repro.resilience import ChaosEvent, ChaosPlan, InjectedFault
+    from repro.serve import (AdmissionConfig, DeadlineExceededError,
+                             OverloadError)
+
+    total_ops = warm + len(rates) * ops
+    rng = np.random.default_rng(0)
+    full = E.to_host(E.synth_entities(rng, n + total_ops * batch,
+                                      n_keys=n_keys, dup_frac=0.2))
+    cfg = api.ERConfig(window=w, variant="repsn", hops=r - 1,
+                       runner="vmap", num_shards=r)
+    executable_cache().clear()
+
+    # chaos at fixed dispatch indices past the warm window: a periodic
+    # latency spike plus sparser injected matcher errors — events the
+    # phases never reach are harmless, so the schedule is static
+    events = [ChaosEvent(batch=k, kind="latency", seconds=spike_s)
+              for k in range(warm + 3, warm + 1 + len(rates) * ops, 6)]
+    events += [ChaosEvent(batch=k, kind="error")
+               for k in range(warm + 7, warm + 1 + len(rates) * ops, 19)]
+    adm = AdmissionConfig(queue_policy="shed_oldest")
+    svc = api.serve(cfg, initial=E.host_take(full, slice(0, n)),
+                    shard_buckets=(8,), cap_floor=256, max_batch=batch,
+                    max_wait_ms=0.0, queue_cap=queue_cap, admission=adm,
+                    chaos=ChaosPlan(tuple(events)))
+
+    live = np.zeros(full["key"].shape[0], bool)
+    live[:n] = True
+    nxt = n
+    times = []
+    for _ in range(warm):           # warm-up doubles as capacity probe
+        t0 = time.perf_counter()
+        svc.resolve_incremental(E.host_take(full, slice(nxt, nxt + batch)))
+        times.append(time.perf_counter() - t0)
+        live[nxt:nxt + batch] = True
+        nxt += batch
+    t_op = float(np.median(times))
+    deadline_ms = 1e3 * t_op * 40   # ~40 batches of queue wait
+
+    del_ptr = 0                     # disjoint delete targets in the base
+    phases = []
+    for rate in rates:
+        interval = t_op / rate
+        before = svc.stats()
+        done_at: dict = {}
+        futs = []                   # (future, kind, lo, hi, t_submit)
+        t0 = time.perf_counter()
+        next_t = t0
+        for op in range(ops):
+            ts = time.perf_counter()
+            if op % 5 == 4 and del_ptr + batch // 4 <= n:
+                lo, hi = del_ptr, del_ptr + batch // 4
+                f = svc.submit_delete(full["eid"][lo:hi],
+                                      deadline_ms=deadline_ms)
+                del_ptr = hi
+                futs.append((f, "delete", lo, hi, ts))
+            else:
+                lo, hi = nxt, nxt + batch
+                f = svc.submit_insert(E.host_take(full, slice(lo, hi)),
+                                      deadline_ms=deadline_ms)
+                nxt = hi
+                futs.append((f, "insert", lo, hi, ts))
+            f.add_done_callback(
+                lambda fut, d=done_at: d.setdefault(
+                    id(fut), time.perf_counter()))
+            next_t += interval
+            time.sleep(max(0.0, next_t - time.perf_counter()))
+        submit_wall = time.perf_counter() - t0
+        ok = shed = expired = chaos_err = hung = unexpected = 0
+        lat = []
+        for f, kind, lo, hi, ts in futs:
+            try:
+                exc = f.exception(timeout=hung_timeout_s)
+            except FutTimeout:
+                hung += 1
+                continue
+            lat.append(done_at.get(id(f), time.perf_counter()) - ts)
+            if exc is None:
+                ok += 1
+                live[lo:hi] = kind == "insert"
+            elif isinstance(exc, OverloadError):
+                shed += 1
+            elif isinstance(exc, DeadlineExceededError):
+                expired += 1
+            elif isinstance(exc, InjectedFault):
+                chaos_err += 1
+            else:
+                unexpected += 1
+        drain_wall = (max(done_at.values()) - t0) if done_at else 0.0
+        after = svc.stats()
+        phases.append({
+            "rate": rate, "submitted": len(futs), "ok": ok,
+            "shed": shed, "expired": expired, "chaos_errors": chaos_err,
+            "hung": hung, "unexpected": unexpected,
+            "degraded_batches": after.degraded_batches
+            - before.degraded_batches,
+            "goodput_rps": ok / max(drain_wall, 1e-9),
+            "shed_rate": shed / max(len(futs), 1),
+            "p95_ms": 1e3 * float(np.percentile(lat, 95)) if lat else 0.0,
+            "p99_ms": 1e3 * float(np.percentile(lat, 99)) if lat else 0.0,
+            "submit_wall_s": submit_wall, "drain_wall_s": drain_wall,
+        })
+
+    repaired = svc.repair()         # the worker may already have repaired
+    st = svc.stats()
+    h = E.host_take(full, np.flatnonzero(live))
+    ref = api.resolve(E.make_entities(h["key"], h["eid"],
+                                      payload=h["payload"],
+                                      valid=h["valid"]), cfg)
+    out = {
+        "n": n, "w": w, "r": r, "batch": batch, "ops": ops, "warm": warm,
+        "queue_cap": queue_cap, "backend": jax.default_backend(),
+        "seconds": t_op,
+        "capacity_batches_per_s": 1.0 / max(t_op, 1e-9),
+        "deadline_ms": deadline_ms,
+        "rates": phases,
+        "chaos_events": len(events),
+        "shed": st.shed, "expired": st.expired,
+        "degraded_batches": st.degraded_batches,
+        "repairs": st.repairs, "repaired_now": repaired,
+        "dirty_after_repair": st.dirty_ranges,
+        "health_final": st.health,
+        "parity": {
+            "blocked_equal": svc.pairs == ref.blocking.pairs,
+            "matched_equal": svc.matches == ref.matches,
+        },
+    }
+    svc.close()
+    return out
 
 
 def jobsn_vs_repsn_body(n: int = 60_000, w: int = 50, n_keys: int = 4096,

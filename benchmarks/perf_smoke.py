@@ -171,6 +171,81 @@ def check_serve(blob: dict) -> list:
     return failures
 
 
+def check_overload(blob: dict) -> list:
+    """Overload gates over a BENCH_overload.json (ISSUE 9 acceptance).
+
+    All machine-independent exact counts: at EVERY load rate the open-loop
+    run must account for each submitted future exactly once with zero hung
+    and zero unexpected failures (no future may dangle, no error may leave
+    the typed taxonomy), goodput must stay positive (the service keeps
+    serving THROUGH overload instead of collapsing), the admission policy
+    must actually engage at the top rate (shed + expired + degraded > 0 —
+    otherwise the bench stopped generating overload), and after pressure
+    drops the ``repair()`` pass must leave zero dirty ranges and served
+    sets bit-identical to a from-scratch resolve of exactly the applied
+    mutations (invariant 13)."""
+    failures = []
+    rates = blob.get("rates", [])
+    if not rates:
+        failures.append("overload blob has no 'rates' section — not a "
+                        "BENCH_overload.json?")
+    for ph in rates:
+        label = f"{ph.get('rate')}x"
+        accounted = sum(int(ph.get(k, 0)) for k in
+                        ("ok", "shed", "expired", "chaos_errors",
+                         "hung", "unexpected"))
+        if accounted != int(ph.get("submitted", -1)):
+            failures.append(
+                f"overload {label}: {ph.get('submitted')} futures "
+                f"submitted but only {accounted} accounted — requests "
+                f"are being silently dropped")
+        if int(ph.get("hung", 1)) != 0:
+            failures.append(
+                f"overload {label}: {ph.get('hung')} future(s) never "
+                f"settled — every request must complete with a result or "
+                f"a typed error")
+        if int(ph.get("unexpected", 1)) != 0:
+            failures.append(
+                f"overload {label}: {ph.get('unexpected')} future(s) "
+                f"failed outside the typed admission taxonomy")
+        if int(ph.get("ok", 0)) < 1 \
+                or float(ph.get("goodput_rps", 0.0)) <= 0.0:
+            failures.append(
+                f"overload {label}: goodput collapsed "
+                f"(ok={ph.get('ok')}, goodput_rps="
+                f"{ph.get('goodput_rps')}) — the service must keep "
+                f"serving through overload")
+    if rates:
+        top = max(rates, key=lambda ph: float(ph.get("rate", 0.0)))
+        engaged = sum(int(top.get(k, 0)) for k in
+                      ("shed", "expired", "degraded_batches"))
+        if engaged < 1:
+            failures.append(
+                f"overload {top.get('rate')}x: admission policy never "
+                f"engaged (shed={top.get('shed')} "
+                f"expired={top.get('expired')} "
+                f"degraded={top.get('degraded_batches')}) — the bench no "
+                f"longer generates real overload")
+    if int(blob.get("dirty_after_repair", 1)) != 0:
+        failures.append(
+            f"overload left {blob.get('dirty_after_repair')} dirty "
+            f"range(s) after repair() — the repair pass must drain all "
+            f"brownout debt")
+    for k, v in blob.get("parity", {}).items():
+        if v is not True:
+            failures.append(
+                f"overload repair broke parity: {k}={v} — post-pressure "
+                f"served sets must be bit-identical to a from-scratch "
+                f"resolve (invariant 13)")
+    print(f"perf_smoke overload: "
+          f"hung={[int(ph.get('hung', -1)) for ph in rates]} "
+          f"shed={[int(ph.get('shed', -1)) for ph in rates]} "
+          f"degraded={[int(ph.get('degraded_batches', -1)) for ph in rates]} "
+          f"parity={all(blob.get('parity', {}).values()) or False} "
+          f"-> {'OK' if not failures else 'FAIL'}")
+    return failures
+
+
 def check_resilience(blob: dict) -> list:
     """Machine-independent structural gates over a BENCH_resilience.json:
     checkpointing must stay cheap (steady checkpointed stream <= 15% over
@@ -272,6 +347,11 @@ def main() -> None:
                     help="optional freshly generated BENCH_serve.json — "
                          "adds the serving structural gates (zero-retrace "
                          "steady state, parity)")
+    ap.add_argument("--overload", default=None,
+                    help="optional freshly generated BENCH_overload.json "
+                         "— adds the overload structural gates (zero hung "
+                         "/ silently-dropped futures at every rate, policy "
+                         "engaged at the top rate, repair parity)")
     ap.add_argument("--resilience", default=None,
                     help="optional freshly generated BENCH_resilience.json "
                          "— adds the fault-tolerance structural gates "
@@ -294,6 +374,10 @@ def main() -> None:
         with open(args.serve) as f:
             blob = json.load(f)
         failures += check_schema(blob, "serve") + check_serve(blob)
+    if args.overload:
+        with open(args.overload) as f:
+            blob = json.load(f)
+        failures += check_schema(blob, "overload") + check_overload(blob)
     if args.resilience:
         with open(args.resilience) as f:
             blob = json.load(f)

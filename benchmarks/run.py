@@ -20,6 +20,10 @@ Tables:
                         inserts/deletes into a ResolutionService
                         (inserts/s, p50/p95 latency, zero-retrace steady
                         state, parity); writes BENCH_serve.json
+  overload              overload-hardened serving: open-loop load at
+                        1x/2x/5x warm capacity under chaos, shed/expired/
+                        degraded accounting, goodput + p95/p99, repair
+                        parity; writes BENCH_overload.json
   resilience            fault tolerance: checkpointed stream overhead,
                         kill/resume wall time + parity, overflow-retry
                         zero-dropped-pairs; writes BENCH_resilience.json
@@ -218,6 +222,34 @@ def serve(quick: bool):
     write_bench("BENCH_serve.json", res)
 
 
+def overload(quick: bool):
+    """Overload-hardened serving (ISSUE 9 acceptance): an open-loop load
+    generator at 1x/2x/5x measured warm capacity under chaos (latency
+    spikes + injected matcher errors), queue_policy=shed_oldest +
+    per-request deadlines.  Gates (perf_smoke --overload): zero hung and
+    zero silently-dropped futures at every rate, the admission policy
+    engaged at the top rate, and post-pressure ``repair()`` bit-parity.
+    Writes BENCH_overload.json."""
+    from benchmarks.bench_sn import overload_body
+    res = overload_body(n=1_500 if quick else 6_000,
+                        batch=60 if quick else 120,
+                        ops=10 if quick else 24,
+                        warm=4 if quick else 5)
+    for ph in res["rates"]:
+        _row(f"overload_{ph['rate']:g}x", ph["p95_ms"] * 1e3,
+             f"goodput_rps={ph['goodput_rps']:.2f};ok={ph['ok']};"
+             f"shed={ph['shed']};expired={ph['expired']};"
+             f"chaos={ph['chaos_errors']};hung={ph['hung']};"
+             f"degraded={ph['degraded_batches']};"
+             f"p99_ms={ph['p99_ms']:.1f}")
+    _row("overload_repair", 0.0,
+         f"blocked={res['parity']['blocked_equal']};"
+         f"matched={res['parity']['matched_equal']};"
+         f"repairs={res['repairs']};dirty={res['dirty_after_repair']};"
+         f"health={res['health_final']}")
+    write_bench("BENCH_overload.json", res)
+
+
 def resilience(quick: bool):
     """Fault tolerance (ISSUE 7 acceptance): checkpoint write overhead vs
     plain streaming, kill-at-chunk-k resume wall time + pair parity, and
@@ -346,6 +378,7 @@ TABLES = {
     "balance": balance,
     "stream": stream,
     "serve": serve,
+    "overload": overload,
     "resilience": resilience,
     "obs": obs,
     "kernels": kernels,

@@ -196,6 +196,12 @@ class ERConfig:
                        share executables and pair sets bit-identically
                        (invariant 12); the disabled path costs one
                        thread-local lookup per span site
+
+    Serving admission control (repro.serve — DESIGN.md §13) is NOT
+    configured here: ``AdmissionConfig`` is a service-level policy passed
+    to ``api.serve(..., admission=...)``.  It changes when requests are
+    refused or deferred, never what a correct resolve produces, so none
+    of its knobs participate in ``static_fingerprint``.
     """
     window: int = 10
     variant: str = "repsn"

@@ -352,7 +352,17 @@ def serve(cfg: ERConfig, *, initial=None, **kwargs):
     to a from-scratch ``resolve`` over the live corpus at every point.
     ``initial`` seeds the corpus through the same insert path; remaining
     kwargs (``max_batch``, ``max_wait_ms``, ``spool_dir``, ...) are
-    forwarded to the service constructor."""
+    forwarded to the service constructor.
+
+    Overload policy (DESIGN.md §13): pass ``admission=AdmissionConfig(...)``
+    to pick the queue policy (``block`` | ``reject`` | ``shed_oldest``),
+    per-request deadlines, the brownout watermarks, and the stuck-batch
+    watchdog.  Under brownout the bit-parity invariant relaxes to
+    EVENTUALLY-exact: blocked pairs stay exact, new matches may be
+    deferred, and ``repair()`` (run automatically when the queue drains)
+    restores full parity.  ``chaos=ChaosPlan(...)`` injects deterministic
+    latency/stall/error disturbances at exact batch indices — the overload
+    test harness, never set in production."""
     from repro.serve import ResolutionService
     return ResolutionService(cfg, initial=initial, **kwargs)
 

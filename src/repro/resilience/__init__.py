@@ -25,14 +25,18 @@ Three legs (DESIGN.md §11):
   * faults        the deterministic ``FaultPlan`` injection harness the
                   kill/resume parity tests drive: crash-after-chunk-k,
                   crash-between-spool-and-commit, and a flaky chunk
-                  iterator that dies mid-ingest.
+                  iterator that dies mid-ingest.  ``ChaosPlan`` extends
+                  the harness to the serving layer: latency spikes,
+                  worker stalls, and matcher errors at exact micro-batch
+                  indices (the overload property tests — DESIGN.md §13).
 
 Serve-side durability (``SortedIndex.snapshot``/``restore``,
 ``ResolutionService.snapshot``/``restore``) lives in ``repro.serve`` and is
 documented there.
 """
 from repro.resilience.checkpoint import StreamCheckpoint, resume_stream
-from repro.resilience.faults import (FaultPlan, InjectedFault, flaky_chunks,
+from repro.resilience.faults import (ChaosEvent, ChaosPlan, FaultPlan,
+                                     InjectedFault, flaky_chunks,
                                      micro_caps)
 from repro.resilience.retry import (CapacityOverflowError, ResilienceStats,
                                     autosize_caps, run_with_recovery)
@@ -40,6 +44,7 @@ from repro.resilience.retry import (CapacityOverflowError, ResilienceStats,
 __all__ = [
     "StreamCheckpoint", "resume_stream",
     "FaultPlan", "InjectedFault", "flaky_chunks", "micro_caps",
+    "ChaosEvent", "ChaosPlan",
     "CapacityOverflowError", "ResilienceStats", "autosize_caps",
     "run_with_recovery",
 ]

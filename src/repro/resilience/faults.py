@@ -16,14 +16,25 @@ together they cover every durability seam the checkpoint protocol has:
                                yielding j chunks (resume re-supplies the
                                iterator and skips the j committed chunks)
 
+The SERVING layer generalizes the same idea past checkpoint labels:
+``ChaosPlan`` injects latency spikes, worker stalls, and matcher errors
+at exact micro-batch indices inside ``ResolutionService``'s batch-apply
+path.  The service consults the plan BEFORE any state mutation, so an
+injected error fails only the batch that hit it — the chaos property
+tests sweep injection schedules against every ``queue_policy`` and
+assert no future ever hangs or silently disappears (DESIGN.md §13).
+
 Overflow-forcing micro-caps are just configuration — build them with
 ``micro_caps``.  Injected crashes raise ``InjectedFault`` so tests can
 catch exactly the planned failure and nothing else.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
-from typing import Iterable, Iterator, Optional
+from typing import Iterable, Iterator, Optional, Tuple
+
+CHAOS_KINDS = ("latency", "stall", "error")
 
 
 class InjectedFault(RuntimeError):
@@ -62,6 +73,56 @@ class FaultPlan:
             raise InjectedFault(
                 f"injected crash after committing chunk {chunk} "
                 f"(pass {label!r})")
+
+
+@dataclass(frozen=True)
+class ChaosEvent:
+    """One injected disturbance at an exact serving micro-batch index.
+
+    ``kind="latency"``  sleep ``seconds`` before the batch's delta call —
+                        a straggler batch (inflates p95, drives the
+                        brownout watermark) that still completes normally;
+    ``kind="stall"``    same sleep, but sized to outlive the service's
+                        ``batch_timeout_s`` — the watchdog fixture (a
+                        stall without a watchdog is just a big latency);
+    ``kind="error"``    raise ``InjectedFault`` — a matcher/delta error.
+                        The service consults the plan before mutating any
+                        state, so the error is request-level: the batch's
+                        futures fail, the service keeps serving.
+    """
+    batch: int
+    kind: str
+    seconds: float = 0.0
+
+    def __post_init__(self) -> None:
+        if self.kind not in CHAOS_KINDS:
+            raise ValueError(f"kind={self.kind!r} not in {CHAOS_KINDS}")
+        if self.batch < 0 or self.seconds < 0:
+            raise ValueError("batch and seconds must be >= 0")
+
+
+@dataclass(frozen=True)
+class ChaosPlan:
+    """Deterministic disturbance schedule for one ``ResolutionService``
+    (the serving analogue of ``FaultPlan``).  Batch indices are 0-based
+    over the batches the service applies, in order — the same counter
+    ``ServeStats.batches`` reports.  A plan is consulted, never mutated;
+    ``on_batch`` is the single hook the service calls at the top of its
+    batch-apply path."""
+    events: Tuple[ChaosEvent, ...] = ()
+
+    def on_batch(self, index: int) -> None:
+        """Apply every event scheduled at ``index``: sleeps first (a
+        stalled worker that THEN errors is the worst case), then at most
+        one raise."""
+        hit = [ev for ev in self.events if ev.batch == index]
+        for ev in hit:
+            if ev.kind in ("latency", "stall"):
+                time.sleep(ev.seconds)
+        for ev in hit:
+            if ev.kind == "error":
+                raise InjectedFault(
+                    f"injected matcher error at serving batch {index}")
 
 
 def flaky_chunks(chunks: Iterable[dict], fail_after: int) -> Iterator[dict]:

@@ -16,15 +16,27 @@ answers "keep a corpus resolved while it changes".  Three layers:
   3. **service** — the micro-batched front end (``ResolutionService``):
      bounded queue, request coalescing, per-request futures, stable pair
      ids, latency/cache telemetry (``ServeStats``).
+  4. **admission** — the overload policy (ISSUE 9): queue policies
+     (block / reject / shed_oldest) behind ``AdmissionConfig``,
+     per-request deadlines, the brownout watermark controller that
+     degrades the delta path under pressure, the stuck-batch watchdog,
+     and the typed error taxonomy (``OverloadError``,
+     ``DeadlineExceededError``, ``BatchTimeoutError``).
 
 Invariant (tested property-style): after any interleaving of inserts and
 deletes, ``service.pairs``/``service.matches`` are bit-identical to a
 from-scratch ``api.resolve`` over the live entities under the same
-config, for all three variants and both band engines.
+config, for all three variants and both band engines.  Under brownout
+the invariant relaxes to EVENTUALLY-exact (DESIGN.md §13): blocked pairs
+stay exact throughout, new matches may be deferred, and ``repair()``
+restores full bit-parity once pressure drops.
 
 (This package previously quarantined the seed repo's LM-serving
 scaffolding; that scaffold is gone — the SN serving layer lives here.)
 """
+from repro.serve.admission import (AdmissionConfig, AdmissionError,
+                                   BatchTimeoutError, DeadlineExceededError,
+                                   OverloadError, WatermarkController)
 from repro.serve.delta import DeltaMatcher, DeltaStats, srp_straddle_packed
 from repro.serve.index import SortedIndex
 from repro.serve.service import (IncrementalResult, ResolutionService,
@@ -33,4 +45,6 @@ from repro.serve.service import (IncrementalResult, ResolutionService,
 __all__ = [
     "SortedIndex", "DeltaMatcher", "DeltaStats", "srp_straddle_packed",
     "ResolutionService", "IncrementalResult", "ServeStats",
+    "AdmissionConfig", "AdmissionError", "OverloadError",
+    "DeadlineExceededError", "BatchTimeoutError", "WatermarkController",
 ]

@@ -55,7 +55,12 @@ class DeltaStats(NamedTuple):
     ``added_*``/``removed_*`` are the packed pair edits (the serving
     result's payload); ``regions``/``region_rows`` size the touched
     neighborhoods; ``shapes`` lists the (num_shards, shard_cap) buckets of
-    the device calls — a steady workload cycles through few of them."""
+    the device calls — a steady workload cycles through few of them.
+    ``degraded`` marks a mutation applied through the brownout path (see
+    ``insert``/``delete``); ``comp_ranges`` are the inclusive composite
+    ranges (c_lo, c_hi) of the touched regions — composites are immutable
+    per entity, so these ranges stay valid anchors for a later ``refresh``
+    no matter how the corpus mutates in between."""
     batch: int
     regions: int
     region_rows: int
@@ -65,6 +70,8 @@ class DeltaStats(NamedTuple):
     removed_blocked: np.ndarray
     added_matched: np.ndarray
     removed_matched: np.ndarray
+    degraded: bool = False
+    comp_ranges: Tuple[Tuple[int, int], ...] = ()
 
 
 def merge_intervals(ranks: np.ndarray, window: int, n: int
@@ -231,11 +238,40 @@ class DeltaMatcher:
             else mparts[0]
         return blocked, matched, len(shapes), tuple(shapes)
 
+    # -- degraded (brownout) path -------------------------------------------
+
+    def _host_pairs(self, regions: List[dict]) -> np.ndarray:
+        """Complete SN blocked pairs of each region, computed EXACTLY on
+        host: a region is a contiguous rank range in composite order, so
+        its blocked set is every pair at sorted distance 1..w-1 — pure
+        index arithmetic, no matcher, no device dispatch.  Bit-identical
+        to the blocked half of ``_device_pairs`` by construction, which is
+        why brownout never degrades the BLOCKED set (DESIGN.md §13)."""
+        w = self.cfg.window
+        parts: List[np.ndarray] = []
+        for reg in regions:
+            eids = np.asarray(reg["eid"], np.int64)
+            for d in range(1, min(w, int(eids.shape[0]))):
+                parts.append(RES.pack_pairs(eids[:-d], eids[d:]))
+        if not parts:
+            return _EMPTY
+        return np.unique(np.concatenate(parts))
+
     # -- mutations -----------------------------------------------------------
 
     def _apply(self, blocked, matched, regions, region_eids, region_ivs,
-               batch_n):
-        after_b, after_m, calls, shapes = self._device_pairs(regions)
+               batch_n, *, degraded: bool = False, comp_ranges=()):
+        if degraded:
+            # brownout: blocked stays exact (host SN arithmetic); matched
+            # is the conservative carry-forward gate — a pair stays
+            # matched while it stays blocked (matcher decisions are
+            # per-pair deterministic over immutable payloads, so every
+            # carried match is one an exact re-resolve would confirm);
+            # NEW matches are deferred to ``refresh`` over comp_ranges
+            after_b = self._host_pairs(regions)
+            after_m, calls, shapes = None, 0, ()
+        else:
+            after_b, after_m, calls, shapes = self._device_pairs(regions)
         if region_eids:
             eids = np.concatenate(region_eids)
             ivs = np.concatenate(region_ivs)
@@ -246,6 +282,8 @@ class DeltaMatcher:
             iv_of = np.empty((0,), np.int64)
         before_b = _restrict(blocked, eid_sorted, iv_of)
         before_m = _restrict(matched, eid_sorted, iv_of)
+        if degraded:
+            after_m = np.intersect1d(before_m, after_b)
         new_blocked = np.union1d(_diff(blocked, before_b), after_b)
         new_matched = np.union1d(_diff(matched, before_m), after_m)
         stats = DeltaStats(
@@ -255,14 +293,23 @@ class DeltaMatcher:
             added_blocked=_diff(after_b, before_b),
             removed_blocked=_diff(before_b, after_b),
             added_matched=_diff(after_m, before_m),
-            removed_matched=_diff(before_m, after_m))
+            removed_matched=_diff(before_m, after_m),
+            degraded=degraded, comp_ranges=tuple(comp_ranges))
         return new_blocked, new_matched, stats
 
-    def insert(self, batch, blocked: np.ndarray, matched: np.ndarray
+    def insert(self, batch, blocked: np.ndarray, matched: np.ndarray,
+               *, degraded: bool = False
                ) -> Tuple[np.ndarray, np.ndarray, DeltaStats]:
         """Fold one batch of NEW entities (device entity dict) into the
         maintained sets.  Returns (blocked', matched', stats); the sorted
-        batch is appended to the index as a run."""
+        batch is appended to the index as a run.
+
+        ``degraded=True`` is the brownout path: zero device calls — the
+        blocked edit is computed exactly on host, the matched edit is the
+        conservative carry-forward gate (previously confirmed matches that
+        stay blocked stay matched; new matches are DEFERRED).  The caller
+        must record ``stats.comp_ranges`` and later ``refresh`` them to
+        restore matched exactness."""
         srun = E.sort_chunk(batch)
         q = E.composite_order_key(srun)
         if q.shape[0] == 0:
@@ -277,9 +324,11 @@ class DeltaMatcher:
         regions: List[dict] = []
         region_eids: List[np.ndarray] = []
         region_ivs: List[np.ndarray] = []
+        comp_ranges: List[Tuple[int, int]] = []
         w = self.cfg.window
         for iv, (lo, hi) in enumerate(merge_intervals(new_ranks, w, n_new)):
             c_lo, c_hi = int(new_all[lo]), int(new_all[hi - 1])
+            comp_ranges.append((c_lo, c_hi))
             old_part = self.index.take_comp_range(c_lo, c_hi)
             blo = int(np.searchsorted(q, c_lo, side="left"))
             bhi = int(np.searchsorted(q, c_hi, side="right"))
@@ -296,14 +345,17 @@ class DeltaMatcher:
             region_ivs.append(np.full(int(region["eid"].shape[0]), iv,
                                       np.int64))
         out = self._apply(blocked, matched, regions, region_eids,
-                          region_ivs, int(q.shape[0]))
+                          region_ivs, int(q.shape[0]), degraded=degraded,
+                          comp_ranges=comp_ranges)
         self.index.insert(srun)
         return out
 
-    def delete(self, eids, blocked: np.ndarray, matched: np.ndarray
+    def delete(self, eids, blocked: np.ndarray, matched: np.ndarray,
+               *, degraded: bool = False
                ) -> Tuple[np.ndarray, np.ndarray, DeltaStats]:
         """Remove live entities by eid from the maintained sets.  Returns
-        (blocked', matched', stats); the index rows are tombstoned."""
+        (blocked', matched', stats); the index rows are tombstoned.
+        ``degraded`` works exactly as in ``insert``."""
         eids = np.unique(np.asarray(eids, np.int64))
         if eids.shape[0] == 0:
             return blocked, matched, DeltaStats(0, 0, 0, 0, (), _EMPTY,
@@ -314,14 +366,16 @@ class DeltaMatcher:
         regions: List[dict] = []
         region_eids: List[np.ndarray] = []
         region_ivs: List[np.ndarray] = []
+        comp_ranges: List[Tuple[int, int]] = []
         w = self.cfg.window
         for iv, (lo, hi) in enumerate(
                 merge_intervals(ranks, w, int(all_.shape[0]))):
             # the region is taken in the PRE-delete order (deleted rows
             # included — they anchor the before-restriction); the device
             # call sees only the survivors, i.e. the post-delete order
-            region = self.index.take_comp_range(int(all_[lo]),
-                                                int(all_[hi - 1]))
+            c_lo, c_hi = int(all_[lo]), int(all_[hi - 1])
+            comp_ranges.append((c_lo, c_hi))
+            region = self.index.take_comp_range(c_lo, c_hi)
             r_eids = np.asarray(region["eid"], np.int64)
             region_eids.append(r_eids)
             region_ivs.append(np.full(r_eids.shape[0], iv, np.int64))
@@ -329,9 +383,44 @@ class DeltaMatcher:
             if keep.shape[0]:
                 regions.append(E.host_take(region, keep))
         out = self._apply(blocked, matched, regions, region_eids,
-                          region_ivs, int(eids.shape[0]))
+                          region_ivs, int(eids.shape[0]), degraded=degraded,
+                          comp_ranges=comp_ranges)
         self.index.delete(eids)
         return out
+
+    def refresh(self, comp_ranges: Sequence[Tuple[int, int]],
+                blocked: np.ndarray, matched: np.ndarray
+                ) -> Tuple[np.ndarray, np.ndarray, DeltaStats]:
+        """The repair pass: re-resolve the given inclusive composite
+        ranges EXACTLY (full device path, real matcher) against the
+        CURRENT live corpus and fold the results into the maintained
+        sets.  No index mutation.
+
+        Correctness (DESIGN.md §13): a degraded mutation's matched errors
+        are confined to pairs with both endpoints inside one recorded
+        comp_range at the time — composites never change, later exact
+        mutations self-heal any overlap they touch, and a contiguous
+        composite range is a contiguous rank range, so the exact
+        maintained set restricted to in-range pairs equals the range's
+        complete SN pairs.  Re-deriving that restriction from a device
+        call therefore erases every residual error; over-coverage (ranges
+        grown by merging, or entities inserted into a dirty range after
+        it was recorded) is idempotent."""
+        regions: List[dict] = []
+        region_eids: List[np.ndarray] = []
+        region_ivs: List[np.ndarray] = []
+        for c_lo, c_hi in comp_ranges:
+            region = self.index.take_comp_range(int(c_lo), int(c_hi))
+            if region is None:
+                continue
+            iv = len(regions)
+            r_eids = np.asarray(region["eid"], np.int64)
+            regions.append(region)
+            region_eids.append(r_eids)
+            region_ivs.append(np.full(r_eids.shape[0], iv, np.int64))
+        return self._apply(blocked, matched, regions, region_eids,
+                           region_ivs, 0, comp_ranges=tuple(
+                               (int(a), int(b)) for a, b in comp_ranges))
 
 
 def srp_straddle_packed(index, cfg) -> np.ndarray:

@@ -23,6 +23,16 @@ same-kind requests coalesce, so a delete never leapfrogs the insert before
 it.  All requests in one micro-batch share the batch's result (``batched``
 reports the coalescing width).  Pair ids are stable for the service's
 lifetime: a pair that is retired and later re-created keeps its id.
+
+Under load the service absorbs pressure instead of collapsing (DESIGN.md
+§13): an ``AdmissionConfig`` picks the queue policy (block / reject /
+shed_oldest) and per-request deadlines, a watermark controller browns the
+delta path out to the degraded (zero-device-call) matcher when the queue
+or p95 latency crosses its high watermark, and the dirty composite ranges
+the brownout touched are re-resolved exactly by the ``repair`` pass once
+pressure drops — eventually-exact (invariant 13).  A ``ChaosPlan`` from
+``repro.resilience`` injects latency/stall/error disturbances at exact
+batch indices for the overload property tests.
 """
 from __future__ import annotations
 
@@ -31,8 +41,8 @@ import os
 import queue
 import threading
 import time
-from concurrent.futures import Future
-from typing import Dict, FrozenSet, NamedTuple, Optional, Tuple
+from concurrent.futures import Future, InvalidStateError
+from typing import Dict, FrozenSet, List, NamedTuple, Optional, Tuple
 
 import numpy as np
 
@@ -41,6 +51,8 @@ from repro.api import results as RES
 from repro.api.variants import get_variant
 from repro.core import entities as E
 from repro.perf import cache as PC
+from repro.resilience.faults import InjectedFault
+from repro.serve import admission as ADM
 from repro.serve.delta import DeltaMatcher, srp_straddle_packed
 from repro.serve.index import SortedIndex
 from repro.stream.store import atomic_savez, atomic_write_json
@@ -64,7 +76,17 @@ class ServeStats(NamedTuple):
     latencies over a sliding window.  ``failure`` is None while the
     service is healthy; after an unexpected worker error it carries that
     error's repr (the service refuses further submissions — DESIGN.md
-    §11)."""
+    §11).
+
+    The overload block (DESIGN.md §13): ``shed``/``rejected``/``expired``
+    count futures failed by admission policy (shed_oldest eviction,
+    reject-at-submit, deadline expiry at batch formation);
+    ``degraded_batches`` counts batches applied through the brownout
+    path, ``repairs`` the repair passes that re-resolved them exactly,
+    ``dirty_ranges`` the composite ranges still awaiting repair
+    (``repair()`` drives this to 0); ``brownout`` is the watermark
+    controller's current state and ``health`` the derived
+    ``ok | degraded | overloaded | failed`` summary."""
     requests: int
     batches: int
     steady_batches: int
@@ -85,6 +107,14 @@ class ServeStats(NamedTuple):
     matches: int
     shapes: Tuple[Tuple[int, int], ...]
     failure: Optional[str] = None
+    shed: int = 0
+    rejected: int = 0
+    expired: int = 0
+    degraded_batches: int = 0
+    repairs: int = 0
+    dirty_ranges: int = 0
+    brownout: bool = False
+    health: str = "ok"
 
 
 class IncrementalResult(NamedTuple):
@@ -93,7 +123,10 @@ class IncrementalResult(NamedTuple):
     ``new_pairs``/``retired_pairs`` are the SERVED blocked-set edits this
     batch caused (both directions are real: an insert can retire old
     pairs, a delete can create them); ``*_matches`` the matched-set edits.
-    ``pair_ids`` maps each NEW pair to its stable service-wide id."""
+    ``pair_ids`` maps each NEW pair to its stable service-wide id.
+    ``degraded=True`` marks a batch applied through the brownout path:
+    its blocked edits are exact, but new matches are deferred until the
+    ``repair`` pass re-resolves the touched ranges (DESIGN.md §13)."""
     new_pairs: FrozenSet[Pair]
     retired_pairs: FrozenSet[Pair]
     new_matches: FrozenSet[Pair]
@@ -101,17 +134,22 @@ class IncrementalResult(NamedTuple):
     pair_ids: Dict[Pair, int]
     batched: int
     stats: ServeStats
+    degraded: bool = False
 
 
 class _Request:
-    __slots__ = ("kind", "data", "n", "future", "t0")
+    __slots__ = ("kind", "data", "n", "future", "t0", "deadline")
 
-    def __init__(self, kind: str, data, n: int):
+    def __init__(self, kind: str, data, n: int,
+                 deadline_ms: Optional[float] = None):
         self.kind = kind
         self.data = data
         self.n = n
         self.future: "Future[IncrementalResult]" = Future()
         self.t0 = time.perf_counter()
+        # absolute monotonic expiry; None = wait forever (legacy)
+        self.deadline = None if deadline_ms is None \
+            else time.monotonic() + deadline_ms * 1e-3
 
 
 class ResolutionService:
@@ -128,6 +166,13 @@ class ResolutionService:
     coalesce.  ``start=False`` skips the worker thread and processes
     every request inline (single-caller tests/benchmarks).
 
+    ``admission`` (an ``AdmissionConfig``) sets the overload policy:
+    queue policy, default deadline, brownout watermarks, stuck-batch
+    watchdog — all service-level, none change what a correct resolve
+    produces (invariant 13).  ``chaos`` (a ``resilience.ChaosPlan``)
+    injects deterministic latency/stall/error disturbances at exact
+    batch indices — the overload test harness, never set in production.
+
     The config must be single-pass, non-linkage, without
     ``return_scores``; the service always executes delta calls on the
     vmap runner, and SRP straddle correction uses ``cfg.num_shards`` —
@@ -139,7 +184,9 @@ class ResolutionService:
                  spool_dir: Optional[str] = None, start: bool = True,
                  segment_rows: int = 4096, max_runs: int = 12,
                  max_tombstone_frac: float = 0.25,
-                 shard_buckets=(2, 4, 8), cap_floor: int = 64):
+                 shard_buckets=(2, 4, 8), cap_floor: int = 64,
+                 admission: Optional[ADM.AdmissionConfig] = None,
+                 chaos=None):
         self.cfg = cfg
         self._boundary_complete = get_variant(cfg.variant).boundary_complete
         self._shard_buckets = shard_buckets     # kept for restore()
@@ -170,11 +217,20 @@ class ResolutionService:
             else None
         self._requests = 0
         self._batches = 0
+        self._dispatched = 0
         self._steady = 0
         self._fill = 0.0
         self._hits = self._misses = self._traces = 0
         self._device_calls = 0
         self._shapes: set = set()
+        self._adm = admission if admission is not None \
+            else ADM.AdmissionConfig()
+        self._chaos = chaos
+        self._watermark = ADM.WatermarkController(self._adm, queue_cap)
+        self._brownout = False
+        self._dirty: List[Tuple[int, int]] = []   # merged (c_lo, c_hi)
+        self._shed = self._rejected = self._expired = 0
+        self._degraded_batches = self._repairs = 0
         self._q: "queue.Queue" = queue.Queue(maxsize=queue_cap)
         self._worker: Optional[threading.Thread] = None
         self._closed = False
@@ -189,19 +245,29 @@ class ResolutionService:
 
     # -- submission ----------------------------------------------------------
 
-    def submit_insert(self, ents) -> "Future[IncrementalResult]":
+    def submit_insert(self, ents, *, deadline_ms: Optional[float] = None
+                      ) -> "Future[IncrementalResult]":
         """Enqueue an insert of NEW entities (device or host entity dict;
-        invalid rows are dropped, live-eid collisions raise).  Blocks for
-        backpressure when the bounded queue is full."""
+        invalid rows are dropped, live-eid collisions raise).  Under the
+        default ``queue_policy="block"`` a full queue blocks for
+        backpressure (failing fast if the worker dies meanwhile); see
+        ``AdmissionConfig`` for the reject/shed policies.  ``deadline_ms``
+        bounds this request's QUEUE WAIT (falls back to the admission
+        config's ``default_deadline_ms``): an expired request fails with
+        ``DeadlineExceededError`` at batch-formation time."""
         h = ents if isinstance(ents.get("key"), np.ndarray) \
             else E.to_host(ents)
-        return self._submit(_Request("insert", h, int(h["key"].shape[0])))
+        return self._submit(_Request("insert", h, int(h["key"].shape[0]),
+                                     self._deadline(deadline_ms)))
 
-    def submit_delete(self, eids) -> "Future[IncrementalResult]":
+    def submit_delete(self, eids, *, deadline_ms: Optional[float] = None
+                      ) -> "Future[IncrementalResult]":
         """Enqueue a delete of live entities by eid (unknown or already-
-        deleted eids fail the whole request)."""
+        deleted eids fail the whole request).  ``deadline_ms`` as in
+        ``submit_insert``."""
         arr = np.asarray(eids, np.int64).reshape(-1)
-        return self._submit(_Request("delete", arr, int(arr.shape[0])))
+        return self._submit(_Request("delete", arr, int(arr.shape[0]),
+                                     self._deadline(deadline_ms)))
 
     def resolve_incremental(self, ents) -> IncrementalResult:
         """Synchronous insert: submit and wait for the batch result."""
@@ -211,17 +277,79 @@ class ResolutionService:
         """Synchronous delete: submit and wait for the batch result."""
         return self.submit_delete(eids).result()
 
-    def _submit(self, req: _Request) -> "Future[IncrementalResult]":
+    def _deadline(self, deadline_ms: Optional[float]) -> Optional[float]:
+        return self._adm.default_deadline_ms if deadline_ms is None \
+            else deadline_ms
+
+    def _check_open(self) -> None:
         if self._failure is not None:
             raise RuntimeError(
                 "service failed and no longer accepts requests"
             ) from self._failure
         if self._closed:
             raise RuntimeError("service is closed")
+
+    def _submit(self, req: _Request) -> "Future[IncrementalResult]":
+        self._check_open()
         if self._worker is None:
-            self._process([req])
-        else:
-            self._q.put(req)
+            self._dispatch(self._drop_expired([req]))
+            return req.future
+        policy = self._adm.queue_policy
+        if policy == "reject":
+            try:
+                self._q.put_nowait(req)
+            except queue.Full:
+                self._rejected += 1
+                if self._tracer is not None:
+                    self._tracer.metrics.counter("rejected").inc()
+                raise ADM.OverloadError(
+                    f"queue full ({self._q.maxsize} deep) under "
+                    f"queue_policy='reject'") from None
+        elif policy == "shed_oldest":
+            while True:
+                try:
+                    self._q.put_nowait(req)
+                    break
+                except queue.Full:
+                    pass
+                self._check_open()
+                try:
+                    old = self._q.get_nowait()
+                except queue.Empty:
+                    continue
+                if old is _STOP:
+                    # the service is closing under us: put the sentinel
+                    # back and refuse the new request
+                    try:
+                        self._q.put_nowait(old)
+                    except queue.Full:
+                        pass
+                    raise RuntimeError("service is closed")
+                self._shed += 1
+                if self._tracer is not None:
+                    self._tracer.metrics.counter("shed").inc()
+                self._settle(old.future, exc=ADM.OverloadError(
+                    "shed: evicted by a newer request under "
+                    "queue_policy='shed_oldest'"))
+        else:   # "block" — legacy backpressure, but never block into a
+            # dead service: re-check failed/closed between bounded put
+            # attempts so a worker failure releases every waiting
+            # submitter with the ORIGINAL error
+            while True:
+                try:
+                    self._q.put(req, timeout=0.05)
+                    break
+                except queue.Full:
+                    self._check_open()
+        if self._failure is not None:
+            # the worker died while we waited (its queue drain is what
+            # freed our slot) — nothing will ever consume this request,
+            # so fail it here rather than let the future dangle
+            try:
+                self._check_open()
+            except RuntimeError as exc:
+                self._settle(req.future, exc=exc)
+                raise
         return req.future
 
     # -- worker --------------------------------------------------------------
@@ -230,7 +358,7 @@ class ResolutionService:
         pending: Optional[_Request] = None
         running = True
         while running:
-            req = pending if pending is not None else self._q.get()
+            req = pending if pending is not None else self._next_request()
             pending = None
             if req is _STOP:
                 break
@@ -255,24 +383,119 @@ class ResolutionService:
                     break
                 group.append(nxt)
                 n += nxt.n
-            self._process(group)
+            self._dispatch(self._drop_expired(group))
             if self._failure is not None:
                 running = False        # dead worker: stop consuming
         if pending is not None and pending is not _STOP:
             if self._failure is not None:
-                pending.future.set_exception(self._failure)
+                self._settle(pending.future, exc=self._failure)
             else:
-                self._process([pending])
+                self._dispatch(self._drop_expired([pending]))
+        # anything still queued raced the shutdown (enqueued after the
+        # stop sentinel or after a failure drain): fail it on the way out
+        # so no future can dangle behind the worker's exit
+        exc = self._failure if self._failure is not None \
+            else RuntimeError("service is closed")
+        while True:
+            try:
+                nxt = self._q.get_nowait()
+            except queue.Empty:
+                break
+            if nxt is not _STOP:
+                self._settle(nxt.future, exc=exc)
+
+    def _next_request(self):
+        """Blocking queue get, interleaving the background repair pass:
+        when the queue drains while repair debt is outstanding, pressure
+        is gone by definition — release the brownout through the
+        watermark (depth 0; latency is NOT consulted, its sliding window
+        decays too slowly to gate recovery) and re-resolve the dirty
+        ranges exactly before going back to sleep."""
+        while True:
+            try:
+                if not self._dirty:
+                    return self._q.get()
+                return self._q.get(timeout=0.02)
+            except queue.Empty:
+                self._brownout = self._watermark.update(0, 0.0)
+                if not self._brownout:
+                    self.repair()
+
+    def _drop_expired(self, group) -> list:
+        """Batch-formation deadline check: fail every expired request
+        with ``DeadlineExceededError`` BEFORE any work is spent on it and
+        return the survivors.  A request that makes it into the returned
+        group runs to completion — deadlines bound queue wait, not
+        compute."""
+        now = time.monotonic()
+        alive = []
+        for r in group:
+            if r.deadline is not None and now > r.deadline:
+                self._expired += 1
+                if self._tracer is not None:
+                    self._tracer.metrics.counter("expired").inc()
+                self._settle(r.future, exc=ADM.DeadlineExceededError(
+                    f"deadline passed after "
+                    f"{1e3 * (time.perf_counter() - r.t0):.1f}ms in the "
+                    f"queue, before the request entered a batch"))
+            else:
+                alive.append(r)
+        return alive
+
+    def _dispatch(self, group) -> None:
+        """Run one batch, under the stuck-batch watchdog when
+        ``batch_timeout_s`` is set (the zero-overhead inline path is kept
+        when it is not).  On expiry the batch fails with
+        ``BatchTimeoutError`` instead of hanging the worker — and the
+        service fails with it: the abandoned batch thread may still
+        mutate state, so the parity invariant can no longer be
+        guaranteed (DESIGN.md §13)."""
+        if not group:
+            return
+        timeout = self._adm.batch_timeout_s
+        if timeout is None:
+            self._process(group)
+            return
+        done = threading.Event()
+
+        def run() -> None:
+            try:
+                self._process(group)
+            finally:
+                done.set()
+
+        t = threading.Thread(target=run, name="resolution-batch",
+                             daemon=True)
+        t.start()
+        if not done.wait(timeout):
+            self._fail(ADM.BatchTimeoutError(
+                f"batch of {len(group)} request(s) exceeded "
+                f"batch_timeout_s={timeout}"), group)
+
+    @staticmethod
+    def _settle(fut: "Future", exc: Optional[BaseException] = None,
+                result=None) -> None:
+        """Resolve a future exactly once: a watchdog-failed batch and its
+        zombie thread may both reach the same future — whoever is second
+        must be a no-op, not an InvalidStateError."""
+        try:
+            if exc is not None:
+                fut.set_exception(exc)
+            else:
+                fut.set_result(result)
+        except InvalidStateError:
+            pass
 
     def _process(self, group) -> None:
         try:
             result = self._apply_batch(group)
-        except ValueError as exc:
-            # request-level rejection (bad input: eid collisions, unknown
-            # deletes, ...): the batch's callers get the error, the
-            # service state is untouched and keeps serving
+        except (ValueError, InjectedFault) as exc:
+            # request-level rejection: bad input (eid collisions, unknown
+            # deletes, ...) or a chaos-injected matcher error — both are
+            # raised BEFORE any state mutation, so the batch's callers
+            # get the error and the service keeps serving
             for r in group:
-                r.future.set_exception(exc)
+                self._settle(r.future, exc=exc)
         except BaseException as exc:  # noqa: BLE001 — service-level failure
             # anything else means the worker can no longer guarantee its
             # parity invariant: mark the service failed (never die
@@ -281,25 +504,28 @@ class ResolutionService:
             self._fail(exc, group)
         else:
             for r in group:
-                r.future.set_result(result)
+                self._settle(r.future, result=result)
 
     def _fail(self, exc: BaseException, group) -> None:
         self._failure = exc
         self._closed = True
         for r in group:
-            r.future.set_exception(exc)
+            self._settle(r.future, exc=exc)
         while True:              # queued requests must not hang forever
             try:
                 nxt = self._q.get_nowait()
             except queue.Empty:
                 break
             if nxt is not _STOP:
-                nxt.future.set_exception(exc)
+                self._settle(nxt.future, exc=exc)
 
     def _apply_batch(self, group) -> IncrementalResult:
         if self._tracer is None:
             return self._apply_batch_inner(group)
         t0 = time.perf_counter()
+        for r in group:
+            self._tracer.metrics.histogram("admission_ms").observe(
+                1e3 * (t0 - r.t0))      # queue wait per admitted request
         with OBS.activate(self._tracer), OBS.span(
                 "batch", kind=group[0].kind, requests=len(group),
                 entities=sum(r.n for r in group)):
@@ -310,6 +536,23 @@ class ResolutionService:
 
     def _apply_batch_inner(self, group) -> IncrementalResult:
         kind = group[0].kind
+        # chaos + brownout decisions happen OUTSIDE the lock: an injected
+        # stall must not hold stats() hostage, and an injected error must
+        # fire before any state mutation (request-level by construction)
+        # chaos indexes DISPATCHED batches, not completed ones: an
+        # injected error must consume its slot, or it would re-fire on
+        # every retry forever (``_batches`` only counts completions)
+        idx = self._dispatched
+        self._dispatched += 1
+        if self._chaos is not None:
+            self._chaos.on_batch(idx)
+        p95 = 0.0 if self._adm.brownout_p95_ms is None \
+            else 1e3 * self._latency.percentile(0.95)
+        self._brownout = self._watermark.update(self._q.qsize(), p95)
+        degraded = self._brownout
+        if self._tracer is not None:
+            self._tracer.metrics.gauge("brownout").set(
+                1.0 if degraded else 0.0)
         with self._lock:
             cache = PC.executable_cache()
             before = cache.stats.snapshot()
@@ -320,12 +563,19 @@ class ResolutionService:
                                       payload=h["payload"],
                                       valid=h["valid"])
                 nb, nm, dstats = self._delta.insert(dev, self._blocked,
-                                                    self._matched)
+                                                    self._matched,
+                                                    degraded=degraded)
             else:
                 eids = np.concatenate([r.data for r in group])
                 nb, nm, dstats = self._delta.delete(eids, self._blocked,
-                                                    self._matched)
+                                                    self._matched,
+                                                    degraded=degraded)
             self._blocked, self._matched = nb, nm
+            if dstats.degraded:
+                self._degraded_batches += 1
+                self._record_dirty(dstats.comp_ranges)
+                if self._tracer is not None:
+                    self._tracer.metrics.counter("degraded_batches").inc()
             dh, dm, dt = cache.stats.delta(before)
             self._hits += dh
             self._misses += dm
@@ -367,7 +617,69 @@ class ResolutionService:
             retired_pairs=RES.packed_to_frozenset(gone_p),
             new_matches=RES.packed_to_frozenset(new_m),
             retired_matches=RES.packed_to_frozenset(gone_m),
-            pair_ids=ids, batched=len(group), stats=stats)
+            pair_ids=ids, batched=len(group), stats=stats,
+            degraded=dstats.degraded)
+
+    # -- brownout repair -----------------------------------------------------
+
+    def _record_dirty(self, ranges) -> None:
+        """Fold the composite ranges a degraded batch touched into the
+        merged dirty list (sorted, overlaps coalesced).  Composites are
+        immutable per entity, so the ranges stay valid repair anchors no
+        matter what mutates in between (DESIGN.md §13)."""
+        merged = sorted(self._dirty
+                        + [(int(a), int(b)) for a, b in ranges])
+        out: List[Tuple[int, int]] = []
+        for lo, hi in merged:
+            if out and lo <= out[-1][1]:
+                out[-1] = (out[-1][0], max(out[-1][1], hi))
+            else:
+                out.append((lo, hi))
+        self._dirty = out
+
+    def repair(self) -> int:
+        """Re-resolve every dirty composite range EXACTLY (full device
+        path, real matcher) and fold the results into the maintained and
+        served sets — after this returns, the served sets are
+        bit-identical to a from-scratch ``resolve`` of the live corpus
+        (invariant 13, the eventually-exact half).  Returns the number of
+        ranges repaired (0 = nothing was dirty).
+
+        The worker runs this automatically whenever the queue drains
+        while repair debt is outstanding; ``start=False`` services (and
+        tests that want deterministic timing) call it directly."""
+        with self._lock:
+            return self._repair_locked()
+
+    def _repair_locked(self) -> int:
+        if not self._dirty:
+            return 0
+        ranges, self._dirty = self._dirty, []
+        cache = PC.executable_cache()
+        before = cache.stats.snapshot()
+        nb, nm, dstats = self._delta.refresh(ranges, self._blocked,
+                                             self._matched)
+        self._blocked, self._matched = nb, nm
+        dh, dm, dt = cache.stats.delta(before)
+        self._hits += dh
+        self._misses += dm
+        self._traces += dt
+        self._device_calls += dstats.device_calls
+        self._shapes.update(dstats.shapes)
+        self._repairs += 1
+        if self._tracer is not None:
+            self._tracer.metrics.counter("repairs").inc()
+        if self._boundary_complete:
+            self._served_b, self._served_m = nb, nm
+        else:
+            straddle = srp_straddle_packed(self.index, self.cfg)
+            self._served_b = np.setdiff1d(nb, straddle)
+            self._served_m = np.setdiff1d(nm, straddle)
+        # the blocked set never degrades, so repair cannot mint pairs the
+        # id table has not seen — guard anyway so ids stay total
+        for packed in dstats.added_blocked.tolist():
+            self._pair_ids.setdefault(packed, len(self._pair_ids))
+        return len(ranges)
 
     # -- state ---------------------------------------------------------------
 
@@ -399,10 +711,12 @@ class ResolutionService:
 
     def _stats_locked(self) -> ServeStats:
         pct = lambda p: 1e3 * self._latency.percentile(p)
+        depth = self._q.qsize()
+        cap = self._q.maxsize
         return ServeStats(
             requests=self._requests, batches=self._batches,
             steady_batches=self._steady,
-            queue_depth=self._q.qsize(),
+            queue_depth=depth,
             batch_fill=self._fill / max(self._batches, 1),
             cache_hits=self._hits, cache_misses=self._misses,
             traces=self._traces, device_calls=self._device_calls,
@@ -414,7 +728,18 @@ class ResolutionService:
             pairs=int(self._served_b.shape[0]),
             matches=int(self._served_m.shape[0]),
             shapes=tuple(sorted(self._shapes)),
-            failure=None if self._failure is None else repr(self._failure))
+            failure=None if self._failure is None else repr(self._failure),
+            shed=self._shed, rejected=self._rejected,
+            expired=self._expired,
+            degraded_batches=self._degraded_batches,
+            repairs=self._repairs, dirty_ranges=len(self._dirty),
+            brownout=self._brownout,
+            health=ADM.derive_health(
+                failure=self._failure is not None,
+                brownout=self._brownout,
+                dirty_ranges=len(self._dirty),
+                depth_frac=depth / cap if cap > 0 else 0.0,
+                high=self._adm.brownout_high))
 
     def stats(self) -> ServeStats:
         """Current telemetry snapshot."""
@@ -442,8 +767,11 @@ class ResolutionService:
         maintained + served packed pair sets, the stable pair-id table,
         and a manifest carrying the config fingerprint.  All writes are
         atomic with the manifest last; a restored service serves the
-        IDENTICAL pair set and continues under the same ids."""
+        IDENTICAL pair set and continues under the same ids.  Outstanding
+        brownout repair debt is drained FIRST — a snapshot is always
+        exact, so restore never needs to know about dirty ranges."""
         with self._lock:
+            self._repair_locked()
             self.index.snapshot(snapshot_dir)
             packed = np.fromiter(self._pair_ids.keys(), np.uint64,
                                  len(self._pair_ids))
@@ -502,11 +830,19 @@ class ResolutionService:
 
     # -- lifecycle -----------------------------------------------------------
 
-    def close(self, drain: bool = True) -> None:
+    def close(self, drain: bool = True,
+              timeout: Optional[float] = None) -> None:
         """Stop the worker and refuse new submissions.  ``drain=True``
         (default) processes everything already queued first — every
         previously returned future completes normally; ``drain=False``
-        fails queued requests immediately with a RuntimeError instead."""
+        fails queued requests immediately with a RuntimeError instead.
+
+        ``timeout`` (seconds) bounds the shutdown so it cannot hang
+        behind a stuck batch: if the worker has not finished draining
+        when it expires, every still-queued future fails with
+        ``BatchTimeoutError``, the service marks itself failed, and the
+        abandoned worker (a daemon thread) is left to die with the
+        process.  ``timeout=None`` keeps the legacy unbounded drain."""
         if self._closed:
             return
         self._closed = True
@@ -520,9 +856,32 @@ class ResolutionService:
                     except queue.Empty:
                         break
                     if nxt is not _STOP:
-                        nxt.future.set_exception(err)
-            self._q.put(_STOP)
-            self._worker.join()
+                        self._settle(nxt.future, exc=err)
+            try:
+                self._q.put_nowait(_STOP)
+            except queue.Full:
+                # a full queue behind a stuck worker: only block for the
+                # sentinel when the caller asked for an unbounded drain
+                if timeout is None:
+                    self._q.put(_STOP)
+            self._worker.join(timeout)
+            if self._worker.is_alive():
+                exc = ADM.BatchTimeoutError(
+                    f"close(timeout={timeout}) expired with the worker "
+                    f"still busy; queued requests were abandoned")
+                if self._failure is None:
+                    self._failure = exc
+                while True:
+                    try:
+                        nxt = self._q.get_nowait()
+                    except queue.Empty:
+                        break
+                    if nxt is not _STOP:
+                        self._settle(nxt.future, exc=exc)
+                try:        # the drained queue has room for the sentinel
+                    self._q.put_nowait(_STOP)   # now: a later-recovering
+                except queue.Full:              # worker still stops
+                    pass
             self._worker = None
 
     def __enter__(self) -> "ResolutionService":

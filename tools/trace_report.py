@@ -101,6 +101,27 @@ def digest(doc: dict, top: int) -> dict:
     if rz:
         out["retries"] = rz.get("retries", 0)
         out["escalations"] = rz.get("escalations", 0)
+    # admission-control digest (serving traces, DESIGN.md §13): the
+    # ServeStats overload block plus the admission_ms queue-wait
+    # histogram and the shed/expired/degraded counters the service
+    # records per batch
+    adm = {k: int(serve[k]) for k in
+           ("shed", "rejected", "expired", "degraded_batches",
+            "repairs", "dirty_ranges") if k in serve}
+    for key in ("shed", "rejected", "expired", "degraded_batches",
+                "repairs"):
+        m = metrics.get(key)
+        if m and m.get("type") == "counter":
+            adm.setdefault(key, int(m["value"]))
+    if any(adm.values()):
+        out["admission"] = adm
+        if "health" in serve:
+            out["admission"]["health"] = serve["health"]
+    wait = metrics.get("admission_ms")
+    if wait and wait.get("type") == "histogram" and wait.get("count"):
+        out["admission_wait_ms"] = {
+            "count": wait["count"], "p50": wait.get("p50"),
+            "p95": wait.get("p95")}
     for key in ("overflow_events", "retries", "carry_entities"):
         if key in metrics and metrics[key].get("type") == "counter":
             out.setdefault(key, metrics[key]["value"])
@@ -126,6 +147,20 @@ def render(d: dict) -> str:
         lines.append(f"recovery: {d.get('retries', 0)} retries, "
                      f"{d.get('escalations', 0)} escalations, "
                      f"{d.get('overflow_events', 0)} overflow event(s)")
+    if "admission" in d:
+        a = d["admission"]
+        lines.append(
+            f"admission: {a.get('shed', 0)} shed, "
+            f"{a.get('rejected', 0)} rejected, "
+            f"{a.get('expired', 0)} expired, "
+            f"{a.get('degraded_batches', 0)} degraded batch(es), "
+            f"{a.get('repairs', 0)} repair(s), "
+            f"{a.get('dirty_ranges', 0)} dirty"
+            + (f", health={a['health']}" if "health" in a else ""))
+    if "admission_wait_ms" in d:
+        w = d["admission_wait_ms"]
+        lines.append(f"queue wait: p50={w['p50']:.1f}ms "
+                     f"p95={w['p95']:.1f}ms over {w['count']} request(s)")
     return "\n".join(lines)
 
 
