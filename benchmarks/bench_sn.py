@@ -977,3 +977,120 @@ def obs_body(n: int = 12_000, chunk: int = 3_000, w: int = 8,
                             for v in streams.values()),
         "trace_file": trace_path,
     }
+
+
+def recall_body(n: int = 2_000, w: int = 4, wmax: int = 12, r: int = 4,
+                reps: int = 3, typo_rate: float = 0.1,
+                prune_threshold: float = 0.55) -> dict:
+    """Quality frontier (ISSUE 10 acceptance): PC/RR/F Pareto.
+
+    Runs the labeled skewed corpus (``data/truth.py``: known duplicate
+    clusters up to ``wmax`` entities, ``typo_rate`` corrupted keys) through
+    six blocking configurations and scores each against the gold pair set:
+
+      * ``fixed_w`` / ``fixed_wmid`` / ``fixed_wmax`` — the classic fixed-
+        window frontier (more recall only by paying more comparisons),
+      * ``multipass``    — fixed ``wmax`` + a second identity pass on the
+        uncorrupted ``alt`` key (the typo-recovery lever),
+      * ``adaptive``     — ``window_policy="adaptive"``: base ``w`` grown
+        to per-block density, capped at ``wmax``,
+      * ``meta_blocked`` — adaptive + ``prune_policy="evidence"``: low-
+        evidence candidates dropped before the expensive matcher stage.
+
+    Per config: pairs-completeness / pairs-quality / reduction-ratio / F,
+    blocked + pruned counts, steady wall seconds, and two parity bits
+    (streamed-over-uneven-chunks and traced runs must reproduce the
+    monolithic pair sets bit-identically).  ``gates`` distills the claims
+    perf_smoke --recall enforces: PC=1.0 on the clean corpus at full
+    window with pruning off, adaptive strictly dominating the mid fixed
+    window (higher PC at fewer blocked pairs), pruning engaged without
+    dropping a single gold pair (invariant 14), and all parity bits."""
+    import jax
+    from repro import api, quality, stream
+    from repro.core import entities as E
+    from repro.data.truth import labeled_corpus
+
+    tc = labeled_corpus(1, n, max_cluster=wmax, typo_rate=typo_rate)
+    wmid = (w + wmax) // 2
+
+    def chunks(ents):
+        h = E.to_host(ents)
+        sizes, pos, k = [], 0, 0
+        while pos < n:                     # deterministically uneven chunks
+            s = min(n // 5 + (53 * k) % 97, n - pos)
+            sizes.append(s)
+            pos += s
+            k += 1
+        out, s0 = [], 0
+        for s in sizes:
+            out.append(E.host_take(h, slice(s0, s0 + s)))
+            s0 += s
+        return iter(out)
+
+    base = dict(variant="repsn", hops=r - 1, runner="vmap", num_shards=r)
+    alt_pass = (api.SortKeySpec(name="key"),
+                api.SortKeySpec(name="alt", source="alt", kind="identity"))
+    cfgs = {
+        "fixed_w": api.ERConfig(window=w, **base),
+        "fixed_wmid": api.ERConfig(window=wmid, **base),
+        "fixed_wmax": api.ERConfig(window=wmax, **base),
+        "multipass": api.ERConfig(window=wmax, passes=alt_pass, **base),
+        "adaptive": api.ERConfig(window=w, window_policy="adaptive",
+                                 window_max=wmax, **base),
+        "meta_blocked": api.ERConfig(window=w, window_policy="adaptive",
+                                     window_max=wmax,
+                                     prune_policy="evidence",
+                                     prune_threshold=prune_threshold,
+                                     **base),
+    }
+
+    out = {"n": n, "w": w, "wmid": wmid, "wmax": wmax, "r": r,
+           "typo_rate": typo_rate, "prune_threshold": prune_threshold,
+           "gold_pairs": len(tc.gold), "n_typos": tc.n_typos,
+           "max_block": tc.max_block, "backend": jax.default_backend(),
+           "configs": {}}
+    for name, cfg in cfgs.items():
+        cold, steady, res = _cold_steady(
+            lambda: api.resolve(tc.ents, cfg), steady_reps=reps)
+        q = quality.evaluate(res, tc)
+        sres = stream.resolve_stream(chunks(tc.ents), cfg,
+                                     chunk_size=max(n // 5, wmax))
+        tres = api.resolve(tc.ents, cfg.with_(trace=True))
+        out["configs"][name] = {
+            "pc": q.pairs_completeness, "pq": q.pairs_quality,
+            "rr": q.reduction_ratio, "f": q.f_measure,
+            "blocked": q.blocked_pairs, "true_positives": q.true_positives,
+            "matched": len(res.matches),
+            "pruned": int(res.blocking.pruned),
+            "cold_seconds": cold, "steady_seconds": steady,
+            "seconds": steady,
+            "streamed_equal": sres.pairs == res.pairs
+            and sres.matches == res.matches,
+            "traced_equal": tres.pairs == res.pairs
+            and tres.matches == res.matches,
+        }
+
+    # the clean-corpus full-window gate: with no typos, pruning off and
+    # w >= the largest key block, boundary-complete SN must be exhaustive
+    clean = labeled_corpus(2, n, max_cluster=wmax, typo_rate=0.0)
+    clean_q = quality.evaluate(
+        api.resolve(clean.ents, api.ERConfig(window=clean.max_block,
+                                             **base)), clean)
+
+    c = out["configs"]
+    out["gates"] = {
+        "full_window_pc": clean_q.pairs_completeness,
+        "adaptive_dominates_fixed":
+            c["adaptive"]["pc"] > c["fixed_wmid"]["pc"]
+            and c["adaptive"]["blocked"] <= c["fixed_wmid"]["blocked"],
+        "pruning_engaged": c["meta_blocked"]["pruned"] > 0
+            and c["meta_blocked"]["blocked"] < c["adaptive"]["blocked"],
+        "pruned_gold_dropped":
+            c["adaptive"]["true_positives"]
+            - c["meta_blocked"]["true_positives"],
+        "multipass_recovers_typos":
+            c["multipass"]["pc"] > c["fixed_wmax"]["pc"],
+        "parity_all": all(v["streamed_equal"] and v["traced_equal"]
+                          for v in c.values()),
+    }
+    return out

@@ -337,6 +337,79 @@ def check_obs(blob: dict) -> list:
     return failures
 
 
+def check_recall(blob: dict) -> list:
+    """Match-quality gates over a BENCH_recall.json (ISSUE 10 acceptance).
+
+    All machine-independent exact counts and ratios over the labeled
+    corpus: the Pareto table must carry every required configuration kind
+    (fixed-w, multi-pass, adaptive, meta-blocked) with sane PC/RR values,
+    the clean-corpus full-window run must be exhaustive (PC=1.0 with
+    pruning off and w >= the largest key block), adaptive windows must
+    strictly dominate the mid fixed window (higher pairs-completeness at
+    no more blocked pairs — recomputed here from the rows, not trusted
+    from the writer's gate bit), evidence pruning must have engaged
+    without dropping a single gold pair (invariant 14), and every config's
+    streamed + traced runs must keep bit-parity with monolithic resolve."""
+    failures = []
+    configs = blob.get("configs", {})
+    required = ("fixed_w", "fixed_wmid", "multipass", "adaptive",
+                "meta_blocked")
+    for name in required:
+        if name not in configs:
+            failures.append(f"recall blob missing config {name!r} — the "
+                            f"Pareto table lost a required point")
+    if len(configs) < 4:
+        failures.append(f"recall blob has {len(configs)} configs (< 4) — "
+                        f"not a BENCH_recall.json?")
+    for name, v in configs.items():
+        for metric in ("pc", "rr"):
+            x = float(v.get(metric, -1.0))
+            if not 0.0 <= x <= 1.0:
+                failures.append(f"recall {name}: {metric}={x} outside "
+                                f"[0, 1] — metric math drifted")
+        if not (v.get("streamed_equal") and v.get("traced_equal")):
+            failures.append(
+                f"recall {name}: streamed_equal={v.get('streamed_equal')} "
+                f"traced_equal={v.get('traced_equal')} — quality-path "
+                f"configs must keep streamed/traced pair sets "
+                f"bit-identical to monolithic resolve")
+    gates = blob.get("gates", {})
+    if float(gates.get("full_window_pc", 0.0)) != 1.0:
+        failures.append(
+            f"clean-corpus full-window PC={gates.get('full_window_pc')} "
+            f"!= 1.0 — boundary-complete SN at w >= max block with "
+            f"pruning off must be exhaustive")
+    if {"adaptive", "fixed_wmid"} <= configs.keys():
+        a, f0 = configs["adaptive"], configs["fixed_wmid"]
+        if not (float(a["pc"]) > float(f0["pc"])
+                and int(a["blocked"]) <= int(f0["blocked"])):
+            failures.append(
+                f"adaptive windows no longer dominate the fixed window: "
+                f"pc {a['pc']:.4f} vs {f0['pc']:.4f}, blocked "
+                f"{a['blocked']} vs {f0['blocked']} — adaptive must reach "
+                f"higher pairs-completeness at equal-or-better reduction "
+                f"ratio")
+    if {"adaptive", "meta_blocked"} <= configs.keys():
+        a, m = configs["adaptive"], configs["meta_blocked"]
+        if int(m.get("pruned", 0)) < 1:
+            failures.append("meta-blocking pruned 0 candidates — the "
+                            "evidence-pruning lever never engaged")
+        if int(m["true_positives"]) < int(a["true_positives"]):
+            failures.append(
+                f"pruning dropped "
+                f"{int(a['true_positives']) - int(m['true_positives'])} "
+                f"gold pair(s) scoring above the evidence threshold "
+                f"(invariant 14): {a['true_positives']} -> "
+                f"{m['true_positives']}")
+    print(f"perf_smoke recall: "
+          f"pc={[round(float(v.get('pc', -1)), 4) for v in configs.values()]} "
+          f"full_window_pc={gates.get('full_window_pc')} "
+          f"pruned={configs.get('meta_blocked', {}).get('pruned')} "
+          f"parity={all(v.get('streamed_equal') and v.get('traced_equal') for v in configs.values())} "
+          f"-> {'OK' if not failures else 'FAIL'}")
+    return failures
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("baseline", help="committed BENCH_band_engine.json")
@@ -362,6 +435,13 @@ def main() -> None:
                          "the observability gates (traced overhead <= 5%%, "
                          "disabled <= 1%%, zero extra retraces, streamed "
                          "trace coverage >= 0.9)")
+    ap.add_argument("--recall", default=None,
+                    help="optional freshly generated BENCH_recall.json — "
+                         "adds the match-quality gates (Pareto points "
+                         "present, adaptive dominates fixed-w, clean-"
+                         "corpus full-window PC=1.0, pruning engaged "
+                         "without dropping gold pairs, streamed/traced "
+                         "parity)")
     args = ap.parse_args()
     with open(args.baseline) as f:
         baseline = json.load(f)
@@ -387,6 +467,10 @@ def main() -> None:
         with open(args.obs) as f:
             blob = json.load(f)
         failures += check_schema(blob, "obs") + check_obs(blob)
+    if args.recall:
+        with open(args.recall) as f:
+            blob = json.load(f)
+        failures += check_schema(blob, "recall") + check_recall(blob)
     if failures:
         for msg in failures:
             print(f"perf_smoke FAIL: {msg}", file=sys.stderr)

@@ -31,6 +31,12 @@ Tables:
                         disabled-path cost, zero extra retraces, streamed
                         trace coverage per variant; writes BENCH_obs.json
                         + the Chrome trace BENCH_obs_trace.json
+  recall                ground-truth match quality (repro.quality): the
+                        PC/RR/F Pareto across fixed-w / multi-pass /
+                        adaptive / meta-blocked blocking configs on the
+                        labeled skewed corpus, plus the clean-corpus
+                        full-window PC=1.0 gate and streamed/traced
+                        parity; writes BENCH_recall.json
   kernels               Pallas band kernels vs jnp oracle (CPU timings)
   dedup_e2e             end-to-end corpus dedup throughput + SN-vs-n^2 factor
   roofline              summary of dry-run roofline terms (needs artifacts)
@@ -303,6 +309,33 @@ def obs(quick: bool):
     write_bench("BENCH_obs.json", res)
 
 
+def recall(quick: bool):
+    """Ground-truth match quality (ISSUE 10 acceptance): PC / PQ / RR / F
+    for >= 4 blocking configurations (fixed-w frontier, multi-pass,
+    adaptive windows, evidence-pruned meta-blocking) on the labeled skewed
+    corpus, with streamed + traced bit-parity per config; persists
+    BENCH_recall.json (gated by perf_smoke --recall: Pareto points
+    present, adaptive dominates the mid fixed window, PC=1.0 clean-corpus
+    full-window gate, pruning engaged without dropping gold pairs)."""
+    from benchmarks.bench_sn import recall_body
+    res = recall_body(n=1_200 if quick else 4_000,
+                      reps=2 if quick else 3)
+    for name, v in res["configs"].items():
+        _row(f"recall_{name}", v["steady_seconds"] * 1e6,
+             f"pc={v['pc']:.4f};rr={v['rr']:.4f};f={v['f']:.4f};"
+             f"blocked={v['blocked']};pruned={v['pruned']};"
+             f"streamed={v['streamed_equal']};traced={v['traced_equal']}")
+    g = res["gates"]
+    _row("recall_gates", 0.0,
+         f"full_window_pc={g['full_window_pc']:.4f};"
+         f"adaptive_dominates={g['adaptive_dominates_fixed']};"
+         f"pruning_engaged={g['pruning_engaged']};"
+         f"gold_dropped={g['pruned_gold_dropped']};"
+         f"multipass_recovers={g['multipass_recovers_typos']};"
+         f"parity={g['parity_all']}")
+    write_bench("BENCH_recall.json", res)
+
+
 def kernels(quick: bool):
     import jax
     import jax.numpy as jnp
@@ -381,6 +414,7 @@ TABLES = {
     "overload": overload,
     "resilience": resilience,
     "obs": obs,
+    "recall": recall,
     "kernels": kernels,
     "dedup_e2e": dedup_e2e,
     "roofline": roofline,

@@ -23,6 +23,8 @@ BAND_ENGINES = ("scan", "pallas")
 EMIT_MODES = ("band", "pairs")
 SORT_KEY_KINDS = ("identity", "prefix", "word")
 OVERFLOW_POLICIES = ("count", "retry", "raise")
+WINDOW_POLICIES = ("fixed", "adaptive")
+PRUNE_POLICIES = ("off", "evidence")
 
 
 @dataclass(frozen=True)
@@ -197,6 +199,29 @@ class ERConfig:
                        (invariant 12); the disabled path costs one
                        thread-local lookup per span site
 
+    Quality levers (repro.quality — DESIGN.md §14):
+      window_policy    "fixed" (every entity uses ``window``) | "adaptive"
+                       (each entity's effective window grows with the size
+                       of its key block: weff = clip(block_count, window,
+                       window_max), a pure function of the global
+                       ``KeyProfile``.  The band program compiles ONCE at
+                       window_max; per-entity weff rides the payload as a
+                       traced ``_weff`` field, so the executable cache and
+                       stream/resume invariants hold unchanged)
+      window_max       adaptive ceiling (>= window; dense key blocks reach
+                       it, sparse regions stay at ``window``)
+      prune_policy     "off" | "evidence": meta-blocking comparison pruning
+                       — drop candidate pairs whose CHEAP cascade evidence
+                       falls below ``prune_threshold`` before the expensive
+                       matcher ever sees them.  Pruned pairs leave the
+                       blocked set (reduction ratio improves) and are
+                       counted in ``pruned`` — accounted like overflow, but
+                       deliberate: never retried
+      prune_threshold  normalized cheap-evidence keep bar in [0, 1); a pair
+                       survives iff cheap_score >= threshold * cheap_weight
+                       (invariant 14: a gold pair at/above the bar is NEVER
+                       pruned, in either band engine)
+
     Serving admission control (repro.serve — DESIGN.md §13) is NOT
     configured here: ``AdmissionConfig`` is a service-level policy passed
     to ``api.serve(..., admission=...)``.  It changes when requests are
@@ -231,6 +256,11 @@ class ERConfig:
     passes: Tuple[SortKeySpec, ...] = ()
 
     trace: bool = False
+
+    window_policy: str = "fixed"
+    window_max: int = 0
+    prune_policy: str = "off"
+    prune_threshold: float = 0.0
 
     def __post_init__(self):
         if not isinstance(self.passes, tuple) or any(
@@ -280,6 +310,46 @@ class ERConfig:
                 "emit='pairs' transfers packed pair indices instead of "
                 "bands, so per-slot scores are not materialized on host; "
                 "use emit='band' with return_scores=True")
+        if self.window_policy not in WINDOW_POLICIES:
+            raise ValueError(f"unknown window_policy {self.window_policy!r}; "
+                             f"choose from {WINDOW_POLICIES}")
+        if self.window_policy == "adaptive":
+            if self.linkage:
+                raise ValueError(
+                    "window_policy='adaptive' does not support linkage "
+                    "mode (the dual-source oracle has no per-entity "
+                    "window form yet); use a fixed window")
+            if self.window_max < self.window:
+                raise ValueError(
+                    f"window_policy='adaptive' needs window_max >= window "
+                    f"(the per-entity effective window grows FROM window UP "
+                    f"TO window_max), got window_max={self.window_max} < "
+                    f"window={self.window}")
+            if self.band_engine == "pallas" \
+                    and self.window_max - 1 > self.band_block:
+                raise ValueError(
+                    f"band_engine='pallas' under window_policy='adaptive' "
+                    f"compiles the band at window_max={self.window_max}, "
+                    f"whose band width ({self.window_max - 1}) must fit one "
+                    f"row block, but band_block={self.band_block}")
+        elif self.window_max:
+            raise ValueError(
+                f"window_max only applies to window_policy='adaptive' "
+                f"(got window_policy={self.window_policy!r} with "
+                f"window_max={self.window_max})")
+        if self.prune_policy not in PRUNE_POLICIES:
+            raise ValueError(f"unknown prune_policy {self.prune_policy!r}; "
+                             f"choose from {PRUNE_POLICIES}")
+        if self.prune_policy == "evidence":
+            if not 0.0 <= self.prune_threshold < 1.0:
+                raise ValueError(
+                    f"prune_threshold must be in [0, 1) (a normalized "
+                    f"cheap-evidence fraction), got {self.prune_threshold}")
+        elif self.prune_threshold:
+            raise ValueError(
+                f"prune_threshold only applies to prune_policy='evidence' "
+                f"(got prune_policy={self.prune_policy!r} with "
+                f"prune_threshold={self.prune_threshold})")
         if self.band_engine == "pallas" and self.window - 1 > self.band_block:
             # the band kernels need the whole w-1 band inside one row block
             # (plus its successor); catching this here beats a kernel assert
@@ -317,7 +387,9 @@ class ERConfig:
         return ("ERConfig", self.window, self.variant, self.hops,
                 self.cap_factor, self.matcher, self.return_scores,
                 self.band_engine, self.band_block, self.cand_cap,
-                self.band_interpret, self.emit, self.pair_cap, self.linkage)
+                self.band_interpret, self.emit, self.pair_cap, self.linkage,
+                self.window_policy, self.window_max,
+                self.prune_policy, self.prune_threshold)
 
     @classmethod
     def from_sn_config(cls, sn_cfg, **kw) -> "ERConfig":

@@ -67,14 +67,45 @@ def _total_comparisons(ents: dict, cfg: ERConfig) -> int:
 
 def _host_oracle(ents: dict, cfg: ERConfig):
     """Sequential-SN oracle pair set (cross-source-filtered in linkage
-    mode)."""
+    mode).  Adaptive-window runs get the adaptive oracle: the attached
+    ``_weff`` when the entity set already carries one, else weff recomputed
+    from the key profile (the same pure function the device path uses)."""
     valid = np.asarray(ents["valid"])
     keys = np.asarray(ents["key"])[valid]
     eids = np.asarray(ents["eid"])[valid]
     if cfg.linkage and "src" in ents["payload"]:
         src = np.asarray(ents["payload"]["src"])[valid]
         return LK.sequential_link_pairs(keys, eids, src, cfg.window)
+    weff = None
+    if "_weff" in ents["payload"]:
+        weff = np.asarray(ents["payload"]["_weff"])[valid]
+    elif cfg.window_policy == "adaptive":
+        from repro import quality as Q
+        profile = B.profile_keys(keys, window=cfg.window)
+        weff = Q.weff_for_keys(keys, profile, cfg.window, cfg.window_max)
+    if weff is not None:
+        return sn.adaptive_sn_pairs(keys, eids, weff)
     return sn.sequential_sn_pairs(keys, eids, cfg.window)
+
+
+def _adaptive_rewrite(ents: dict, cfg: ERConfig):
+    """Realize ``window_policy="adaptive"`` (DESIGN.md §14): attach the
+    per-entity effective windows as a traced ``_weff`` payload field (a
+    pure function of the global key profile, so it rides every shuffle /
+    halo / chunking) and rewrite ``window`` to ``window_max`` — the ONE
+    width the band program compiles at.  ``window_policy``/``window_max``
+    stay set (the validation invariant holds at equality), so downstream
+    code can still see the run is adaptive."""
+    import jax.numpy as jnp
+
+    from repro import quality as Q
+    profile = B.profile_keys(ents["key"], window=cfg.window,
+                             valid=ents["valid"])
+    weff = Q.weff_for_keys(np.asarray(ents["key"]), profile, cfg.window,
+                           cfg.window_max)
+    ents = dict(ents, payload=dict(ents["payload"],
+                                   _weff=jnp.asarray(weff, jnp.int32)))
+    return ents, cfg.with_(window=cfg.window_max)
 
 
 def _balance_metrics(plan: B.ShardPlan, out, window: int):
@@ -142,6 +173,8 @@ def _resolve(ents: dict, cfg: ERConfig, *, bounds=None, mesh=None,
     if cfg.passes:
         return _resolve_multipass(ents, cfg, bounds=bounds, mesh=mesh,
                                   axis=axis)
+    if cfg.window_policy == "adaptive":
+        ents, cfg = _adaptive_rewrite(ents, cfg)
     runner = make_runner(cfg, mesh=mesh, axis=axis)
     n_valid = int(np.asarray(ents["valid"]).sum())
     with OBS.span("plan", partitioner=cfg.partitioner, n=n_valid):
@@ -205,7 +238,8 @@ def _resolve(ents: dict, cfg: ERConfig, *, bounds=None, mesh=None,
                               cand_count=out.cand_count,
                               cand_overflow=out.cand_overflow,
                               matcher_evals=out.matcher_evals,
-                              pair_overflow=out.pair_overflow)
+                              pair_overflow=out.pair_overflow,
+                              pruned=out.pruned)
     balance = _balance_metrics(plan, out, cfg.window)
     metrics = None
     if cfg.compute_metrics:
@@ -213,7 +247,11 @@ def _resolve(ents: dict, cfg: ERConfig, *, bounds=None, mesh=None,
 
         from repro.api.variants import get_variant
         with OBS.span("metrics"):
+            # a pruned run's blocked set is NOT the oracle (pruning is the
+            # point); only the unpruned sequential boundary-complete result
+            # doubles as its own oracle
             if cfg.runner == "sequential" and \
+                    cfg.prune_policy == "off" and \
                     get_variant(cfg.variant).boundary_complete:
                 oracle = set(out.blocked)     # already the full SN oracle
             else:
@@ -248,7 +286,8 @@ def union_blocking(results, cfg, runner_name: str) -> BlockingResult:
         num_shards=results[0].blocking.num_shards,
         cand_overflow=sum(r.blocking.cand_overflow for r in results),
         matcher_evals=sum(r.blocking.matcher_evals for r in results),
-        pair_overflow=sum(r.blocking.pair_overflow for r in results))
+        pair_overflow=sum(r.blocking.pair_overflow for r in results),
+        pruned=sum(r.blocking.pruned for r in results))
 
 
 def _resolve_multipass(ents: dict, cfg: ERConfig, *, bounds, mesh,
@@ -363,6 +402,14 @@ def serve(cfg: ERConfig, *, initial=None, **kwargs):
     restores full parity.  ``chaos=ChaosPlan(...)`` injects deterministic
     latency/stall/error disturbances at exact batch indices — the overload
     test harness, never set in production."""
+    if cfg.window_policy == "adaptive":
+        # the incremental profile changes with every insert/delete, so weff
+        # would vary over time and served pair sets could never stay
+        # bit-identical to a from-scratch resolve
+        raise ValueError(
+            "window_policy='adaptive' is not servable: per-entity windows "
+            "derive from the full-corpus key profile, which is incremental "
+            "(time-varying) in the serve path; use a fixed window")
     from repro.serve import ResolutionService
     return ResolutionService(cfg, initial=initial, **kwargs)
 

@@ -139,6 +139,11 @@ class ERMetrics:
     total_comparisons: int
     balance: Optional[BalanceMetrics] = None
     resilience: Optional[ResilienceStats] = None
+    quality: Optional[object] = None  # ground-truth QualityMetrics
+    #                                   (repro.quality.evaluate attaches
+    #                                   PC/PQ/RR/F vs a labeled corpus's
+    #                                   gold pair set — None unless a truth
+    #                                   set was supplied)
 
 
 @dataclass(frozen=True)
@@ -158,6 +163,11 @@ class BlockingResult:
     #                                 pair_cap (emit="pairs"; can lose
     #                                 blocked pairs AND matches — counted,
     #                                 never silent)
+    pruned: int = 0                 # band slots dropped by meta-blocking
+    #                                 comparison pruning (prune_policy=
+    #                                 "evidence"): deliberate low-evidence
+    #                                 filtering, accounted like overflow but
+    #                                 never retried
 
     @property
     def max_load(self) -> int:

@@ -106,6 +106,9 @@ class RunnerOutcome(NamedTuple):
     pair_overflow: int = 0      # emitted index-buffer slots dropped by
     #                             cfg.pair_cap (emit="pairs" only; counted,
     #                             never silent — can lose blocked pairs)
+    pruned: int = 0             # band slots dropped by meta-blocking
+    #                             comparison pruning (prune_policy=
+    #                             "evidence"; deliberate, never retried)
 
 
 class PackedOutcome(NamedTuple):
@@ -127,6 +130,7 @@ class PackedOutcome(NamedTuple):
     cand_overflow: int = 0
     matcher_evals: int = 0
     pair_overflow: int = 0
+    pruned: int = 0
 
     def to_outcome(self) -> RunnerOutcome:
         """Materialize the public RunnerOutcome (frozensets of (lo, hi))."""
@@ -137,7 +141,8 @@ class PackedOutcome(NamedTuple):
             num_shards=self.num_shards, cand_count=self.cand_count,
             cand_overflow=self.cand_overflow,
             matcher_evals=self.matcher_evals,
-            pair_overflow=self.pair_overflow)
+            pair_overflow=self.pair_overflow,
+            pruned=self.pruned)
 
 
 @runtime_checkable
@@ -192,7 +197,7 @@ def _device_outcome_packed(out: dict, cfg, r: int) -> PackedOutcome:
         load = tuple(int(x) for x in np.asarray(out["load"])[0])
         overflow = int(np.asarray(out["overflow"])[0])
         cand_count = np.zeros(r, np.int64)
-        cand_overflow = matcher_evals = pair_overflow = 0
+        cand_overflow = matcher_evals = pair_overflow = pruned = 0
         for p in variant.parts:
             if p in out:
                 cand_count += np.asarray(out[p]["cand_count"], np.int64)
@@ -200,6 +205,8 @@ def _device_outcome_packed(out: dict, cfg, r: int) -> PackedOutcome:
                     int(np.asarray(out[p]["cand_overflow"]).sum())
                 matcher_evals += \
                     int(np.asarray(out[p]["matcher_evals"]).sum())
+                if "pruned" in out[p]:  # meta-blocking comparison pruning
+                    pruned += int(np.asarray(out[p]["pruned"]).sum())
                 if "mask_overflow" in out[p]:  # device-side pair emission
                     pair_overflow += \
                         int(np.asarray(out[p]["mask_overflow"]).sum()) + \
@@ -211,7 +218,8 @@ def _device_outcome_packed(out: dict, cfg, r: int) -> PackedOutcome:
                          cand_count=tuple(int(c) for c in cand_count),
                          cand_overflow=cand_overflow,
                          matcher_evals=matcher_evals,
-                         pair_overflow=pair_overflow)
+                         pair_overflow=pair_overflow,
+                         pruned=pruned)
 
 
 @dataclass(frozen=True)
@@ -386,20 +394,65 @@ class SequentialRunner:
         # partition ids under the plan (rank-granular when it carries dest)
         part = plan.assignment(np.asarray(ents["key"]), valid)
 
+        weff_all = ents["payload"].get("_weff")
+        weff = None if weff_all is None else np.asarray(weff_all)[valid]
+
         with OBS.span("block", runner="sequential", shards=r):
             blocked = RES.pack_pair_set(
                 get_variant(cfg.variant).sequential_pairs(
-                    keys, eids, bounds, cfg.window, part=part))
+                    keys, eids, bounds, cfg.window, part=part, weff=weff))
             if getattr(cfg, "linkage", False) and "src" in ents["payload"]:
                 src = np.asarray(ents["payload"]["src"])[valid]
                 blocked = LK.filter_cross_source_packed(blocked, eids, src)
+        pruned = 0
+        if getattr(cfg, "prune_policy", "off") == "evidence":
+            blocked, pruned = self._prune(ents, blocked, cfg)
         with OBS.span("match", pairs=int(blocked.size)):
             matched = self._match(ents, blocked, cfg)
 
         load = tuple(np.bincount(part, minlength=r).astype(int).tolist())
         return PackedOutcome(blocked=blocked, matched=matched,
                              load=load, overflow=0, num_shards=r,
-                             matcher_evals=int(blocked.size))
+                             matcher_evals=int(blocked.size),
+                             pruned=pruned)
+
+    def _prune(self, ents: dict, blocked: np.ndarray, cfg
+               ) -> Tuple[np.ndarray, int]:
+        """Meta-blocking comparison pruning, sequential-oracle form: score
+        each blocked pair's CHEAP cascade evidence with the same jnp ops
+        the band engines' ``prune_low_evidence`` uses, keep pairs at/above
+        ``prune_threshold`` of the cheap prefix weight.  Identical keep
+        decisions to the device engines (same math, same GATE_EPS slack)."""
+        from repro.core import window as W
+        from repro.core.match import cosine_sim, jaccard_sig
+
+        split = W.split_cascade(cfg.matcher, ents["payload"])
+        if split is None:
+            raise ValueError(
+                "prune_policy='evidence' needs a matcher whose cascade "
+                "starts with a kernel-supported cheap stage (cosine/jaccard "
+                "on a present payload field); split_cascade found none")
+        if blocked.size == 0:
+            return blocked, 0
+        valid = np.asarray(ents["valid"])
+        rows = np.nonzero(valid)[0]
+        eids = np.asarray(ents["eid"])[rows]
+        order = np.argsort(eids)
+        sorted_eids, sorted_rows = eids[order], rows[order]
+        plo, phi = RES.unpack_pairs(np.sort(blocked))
+        ra = sorted_rows[np.searchsorted(sorted_eids, plo)]
+        rb = sorted_rows[np.searchsorted(sorted_eids, phi)]
+        cheap = jnp.zeros((ra.shape[0],), jnp.float32)
+        if split.feat_field is not None:
+            feat = jnp.asarray(ents["payload"][split.feat_field])
+            cheap = cheap + split.w_cos * cosine_sim(feat[ra], feat[rb])
+        if split.sig_field is not None:
+            sig = jnp.asarray(ents["payload"][split.sig_field])
+            cheap = cheap + split.w_jac * jaccard_sig(sig[ra], sig[rb])
+        bar = cfg.prune_threshold * (split.w_cos + split.w_jac) - W.GATE_EPS
+        keep = np.asarray(cheap) >= bar
+        kept = np.sort(blocked)[keep]
+        return kept, int(blocked.size - kept.size)
 
     def _match(self, ents: dict, blocked: np.ndarray, cfg) -> np.ndarray:
         """Batch-score blocked pairs (packed uint64 array) with the cascade

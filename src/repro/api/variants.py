@@ -152,12 +152,17 @@ class VariantBase:
 
     def sequential_pairs(self, keys: np.ndarray, eids: np.ndarray,
                          bounds: np.ndarray, w: int,
-                         part: np.ndarray = None) -> Set[Tuple[int, int]]:
+                         part: np.ndarray = None,
+                         weff: np.ndarray = None) -> Set[Tuple[int, int]]:
         """Host oracle with this variant's semantics (boundary-complete
         variants return the full sequential SN pair set).  ``part``: per-
         entity shard ids from a rank-granular ShardPlan — overrides the
         key->shard map for variants whose pair set depends on the
-        partitioning (SRP)."""
+        partitioning (SRP).  ``weff``: per-entity effective windows
+        (adaptive policy) — the later sorted element's weff bounds each
+        pair's distance, overriding the constant ``w``."""
+        if weff is not None:
+            return sn.adaptive_sn_pairs(keys, eids, weff)
         return sn.sequential_sn_pairs(keys, eids, w)
 
 
@@ -171,7 +176,7 @@ class SrpVariant(VariantBase):
     def _windows(self, sorted_ents, r, axis, cfg):
         return {"main": self._band(sorted_ents, 0, "all", cfg)}
 
-    def sequential_pairs(self, keys, eids, bounds, w, part=None):
+    def sequential_pairs(self, keys, eids, bounds, w, part=None, weff=None):
         """SRP's host oracle: SN pairs WITHIN each partition only (``part``
         per-entity ids win over the ``bounds`` key map) — boundary pairs
         are missed by design, exactly like the device program."""
@@ -180,7 +185,11 @@ class SrpVariant(VariantBase):
         pairs: Set[Tuple[int, int]] = set()
         for p in np.unique(part):
             sel = part == p
-            pairs |= sn.sequential_sn_pairs(keys[sel], eids[sel], w)
+            if weff is not None:
+                pairs |= sn.adaptive_sn_pairs(keys[sel], eids[sel],
+                                              np.asarray(weff)[sel])
+            else:
+                pairs |= sn.sequential_sn_pairs(keys[sel], eids[sel], w)
         return pairs
 
 

@@ -27,6 +27,29 @@ def sequential_sn_pairs(keys: np.ndarray, eids: np.ndarray,
     return pairs
 
 
+def adaptive_sn_pairs(keys: np.ndarray, eids: np.ndarray,
+                      weff: np.ndarray) -> Set[Tuple[int, int]]:
+    """Adaptive-window SN oracle: each entity carries its OWN effective
+    window, and the pair (i-d, i) exists iff d < weff[i] — the LATER sorted
+    element owns the comparison (the same ownership rule the band mask and
+    the profile cost model use).  ``weff`` is per-entity, aligned with
+    ``keys``/``eids`` BEFORE sorting; constant weff == w reduces exactly to
+    ``sequential_sn_pairs``."""
+    order = np.lexsort((eids, keys))
+    se = eids[order]
+    sw = np.asarray(weff)[order]
+    n = len(se)
+    pairs = set()
+    for j in range(n):
+        for d in range(1, int(sw[j])):
+            i = j - d
+            if i < 0:
+                break
+            a, b = int(se[i]), int(se[j])
+            pairs.add((min(a, b), max(a, b)))
+    return pairs
+
+
 def expected_pair_count(n: int, w: int) -> int:
     """Exact count of sliding-window pairs for n >= w (the paper states
     (n - w/2)(w-1); exactly: (n-w+1)(w-1) full windows + (w-1)w/2 tail... the

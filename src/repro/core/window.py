@@ -56,7 +56,7 @@ GATE_EPS = 1e-5
 
 
 def _pair_mask(valid: jax.Array, d: jax.Array, *, halo_len: int,
-               mode: str) -> jax.Array:
+               mode: str, weff: Optional[jax.Array] = None) -> jax.Array:
     """Mask for pairs (i, i+d) of a combined [halo | native] array.
 
     mode:
@@ -66,11 +66,18 @@ def _pair_mask(valid: jax.Array, d: jax.Array, *, halo_len: int,
       "cross"    earlier element in the first half, later in the second half
                  (JobSN boundary job: only cross-partition pairs; same-side
                  pairs were emitted in phase 1)
+
+    ``weff`` (adaptive windows, DESIGN.md §14) is a per-slot effective
+    window: pair (i, i+d) additionally requires d < weff[i+d] — the LATER
+    element owns the comparison, the same ownership rule as the cost model,
+    so per-entity windows compose with every mode/halo convention.
     """
     m = valid.shape[0]
     i = jnp.arange(m, dtype=jnp.int32)
     j = i + d
     ok = (j < m) & valid & jnp.roll(valid, -d)
+    if weff is not None:
+        ok &= d < jnp.roll(weff, -d)
     if mode == "native":
         ok &= j >= halo_len
     elif mode == "cross":
@@ -89,13 +96,15 @@ def cross_source_rows(src: jax.Array, w: int) -> jax.Array:
 
 
 def band_mask(valid: jax.Array, w: int, *, halo_len: int = 0,
-              mode: str = "all",
-              src: Optional[jax.Array] = None) -> jax.Array:
+              mode: str = "all", src: Optional[jax.Array] = None,
+              weff: Optional[jax.Array] = None) -> jax.Array:
     """(w-1, M) validity band: row d-1 masks distance-d pairs.  ``src``
     (linkage mode) additionally restricts to cross-source pairs via
-    ``cross_source_rows``."""
+    ``cross_source_rows``; ``weff`` restricts each pair to the later
+    element's effective window (adaptive policy)."""
     def step(_, d):
-        return None, _pair_mask(valid, d, halo_len=halo_len, mode=mode)
+        return None, _pair_mask(valid, d, halo_len=halo_len, mode=mode,
+                                weff=weff)
     _, rows = jax.lax.scan(step, None, jnp.arange(1, w, dtype=jnp.int32))
     if src is not None:
         rows = rows & cross_source_rows(src, w)
@@ -111,11 +120,12 @@ def band_scores(ents: dict, w: int, matcher: CascadeMatcher, *,
     O(M * F) live memory regardless of w."""
     payload = ents["payload"]
     valid = ents["valid"]
+    weff = payload.get("_weff")      # adaptive per-entity windows, if riding
 
     def step(_, d):
         rolled = {k: jnp.roll(v, -d, axis=0) for k, v in payload.items()}
         score, _ = matcher.combined(payload, rolled, skip=skip)
-        ok = _pair_mask(valid, d, halo_len=halo_len, mode=mode)
+        ok = _pair_mask(valid, d, halo_len=halo_len, mode=mode, weff=weff)
         return None, (jnp.where(ok, score, 0.0), ok)
 
     _, (scores, mask) = jax.lax.scan(
@@ -224,6 +234,33 @@ def score_candidates(ents: dict, cand_i, cand_d, cand_valid,
     pb = {k: v[j] for k, v in ents["payload"].items()}
     score, _ = matcher.combined(pa, pb, skip=False)
     return jnp.where(cand_valid, score, 0.0)
+
+
+def prune_low_evidence(payload: dict, matcher: CascadeMatcher, w: int,
+                       mask: jax.Array, threshold: float
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Meta-blocking comparison pruning (DESIGN.md §14): shrink the blocked
+    band to pairs whose CHEAP cascade evidence clears ``threshold`` (a
+    fraction of the cheap prefix's weight), BEFORE the expensive matcher.
+
+    The evidence is always ``cheap_band_jnp`` — the identical jnp math both
+    engines' gates use — so prune decisions are bit-identical between scan
+    and pallas, and the GATE_EPS slack guarantees a pair exactly at the bar
+    is kept (invariant 14: no gold pair at/above the bar is ever pruned).
+
+    Returns (kept_mask, pruned_count).  Raises when the matcher has no
+    kernel-supported cheap prefix — there is no evidence to prune on."""
+    split = split_cascade(matcher, payload)
+    if split is None:
+        raise ValueError(
+            "prune_policy='evidence' needs a matcher whose cascade starts "
+            "with a kernel-supported cheap stage (cosine/jaccard on a "
+            "present payload field); split_cascade found none")
+    cheap = cheap_band_jnp(payload, split, w)               # (w-1, M)
+    bar = threshold * (split.w_cos + split.w_jac) - GATE_EPS
+    kept = mask & (cheap >= bar)
+    pruned = band_pair_count(mask) - band_pair_count(kept)
+    return kept, pruned.astype(jnp.int32)
 
 
 def band_pair_count(mask: jax.Array) -> jax.Array:
@@ -345,12 +382,18 @@ class ScanBandEngine(BandEngine):
         src = self._src(ents, cfg)
         if src is not None:
             mask = mask & cross_source_rows(src, cfg.window)
+        pruned = jnp.int32(0)
+        if getattr(cfg, "prune_policy", "off") == "evidence":
+            mask, pruned = prune_low_evidence(
+                ents["payload"], cfg.matcher, cfg.window, mask,
+                cfg.prune_threshold)
         match = (scores >= cfg.matcher.threshold) & mask
         m = ents["valid"].shape[0]
         out = {"mask": mask, "match": match,
                "matcher_evals": jnp.int32((cfg.window - 1) * m),
                "cand_count": jnp.int32(0),
-               "cand_overflow": jnp.int32(0)}
+               "cand_overflow": jnp.int32(0),
+               "pruned": pruned}
         if cfg.return_scores:
             out["scores"] = scores
         return out
@@ -436,10 +479,17 @@ class PallasBandEngine(BandEngine):
         w = cfg.window
         valid = ents["valid"]
         m = valid.shape[0]
-        mask = band_mask(valid, w, halo_len=halo_len, mode=mode,
-                         src=self._src(ents, cfg))
-
         payload = ents["payload"]
+        mask = band_mask(valid, w, halo_len=halo_len, mode=mode,
+                         src=self._src(ents, cfg),
+                         weff=payload.get("_weff"))
+        pruned = jnp.int32(0)
+        if getattr(cfg, "prune_policy", "off") == "evidence":
+            # prune BEFORE the gate: the blocked set itself shrinks (the
+            # reduction-ratio lever), and the gate then only sees survivors
+            mask, pruned = prune_low_evidence(payload, cfg.matcher, w, mask,
+                                              cfg.prune_threshold)
+
         if cfg.band_interpret is None and ops.default_interpret():
             # auto mode off-TPU: band-shaped jnp cheap stage (the tile
             # kernel's 2*block_i scores per row only pay off on the MXU;
@@ -477,7 +527,8 @@ class PallasBandEngine(BandEngine):
                # full band and there is no expensive-stage saving
                "matcher_evals": jnp.int32(cap),
                "cand_count": jnp.minimum(n_cand, cap).astype(jnp.int32),
-               "cand_overflow": overflow.astype(jnp.int32)}
+               "cand_overflow": overflow.astype(jnp.int32),
+               "pruned": pruned}
         if cfg.return_scores:
             # survivors carry their exact rescored value; gated-out slots are
             # 0 (they are sub-threshold by construction)

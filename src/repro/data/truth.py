@@ -1,0 +1,158 @@
+"""Labeled corpus generator — entities with KNOWN duplicate clusters.
+
+Everything else in ``repro.data`` plants duplicates and forgets where they
+went; quality measurement needs the opposite: a corpus whose complete gold
+pair set is known by construction.  ``labeled_corpus`` builds one
+deterministically from a seed (DESIGN.md §14):
+
+  * entities are generated in UNITS: singletons and duplicate clusters of
+    size 2..max_cluster, cluster sizes drawn with P(s) ∝ s^-size_skew (the
+    skew knob: higher = big clusters rarer); one max_cluster-sized cluster
+    is always planted so the tail exists at every seed;
+  * each unit owns a distinct blocking key, so a cluster of size c is a
+    key block of density c — exactly the signal ``window_policy="adaptive"``
+    reads (weff grows to c where fixed w < c misses the block's far pairs);
+  * ``typo_rate`` corrupts the KEY of cluster members (never member 0 — a
+    cluster is never fully lost): the classic dirty-key failure a single
+    blocking pass cannot recover.  The ``alt`` payload field carries each
+    unit's uncorrupted secondary key, so a multi-pass run with an
+    ``identity``-on-``alt`` pass wins back exactly those pairs;
+  * payloads follow the repo's matcher schema (unit-norm ``feat`` float32,
+    bit-signature ``sig`` uint32): cluster members share a signature and a
+    lightly-noised feature vector, so ``default_matcher`` scores duplicates
+    ≈1.0 and random pairs ≈0.5 — the separation the pruning lever
+    (``prune_policy="evidence"``) needs.
+
+Gold pairs are all intra-cluster pairs, returned both as a frozenset of
+(lo, hi) eid tuples and packed uint64 (``(lo << 32) | hi``, the repo-wide
+set-algebra representation ``repro.quality.evaluate`` consumes).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import FrozenSet, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import entities as E
+
+
+@dataclass(frozen=True)
+class TruthCorpus:
+    """A labeled corpus: entities + their complete gold duplicate pair set.
+
+    ents         entity dict (key/eid/valid/payload with feat, sig, alt)
+    gold         frozenset of (lo, hi) gold eid pairs (all intra-cluster)
+    gold_packed  the same pairs packed uint64, sorted unique
+    n            entity count
+    n_units      generated units (clusters + singletons)
+    max_cluster  largest planted cluster size
+    max_block    largest key-block density (== max_cluster here: one unit
+                 per key) — PC is 1.0 for any boundary-complete fixed-w run
+                 with w >= max_block when typo_rate == 0
+    n_typos      cluster members whose key was corrupted
+    """
+    ents: dict
+    gold: FrozenSet[Tuple[int, int]]
+    gold_packed: np.ndarray
+    n: int
+    n_units: int
+    max_cluster: int
+    max_block: int
+    n_typos: int
+
+
+def labeled_corpus(seed: int, n: int, *, max_cluster: int = 12,
+                   cluster_rate: float = 0.35, size_skew: float = 1.0,
+                   typo_rate: float = 0.0, feat_dim: int = 32,
+                   sig_words: int = 8,
+                   key_space: int = 1 << 20) -> TruthCorpus:
+    """Deterministic labeled corpus of ``n`` entities (see module doc).
+
+    ``cluster_rate`` is the probability each new unit is a cluster (vs a
+    singleton); ``size_skew`` shapes the cluster-size distribution
+    P(s) ∝ s^-size_skew over 2..max_cluster."""
+    if max_cluster < 2:
+        raise ValueError(f"max_cluster must be >= 2, got {max_cluster}")
+    if not 0.0 <= typo_rate < 1.0:
+        raise ValueError(f"typo_rate must be in [0, 1), got {typo_rate}")
+    rng = np.random.default_rng(seed)
+
+    sizes_choices = np.arange(2, max_cluster + 1)
+    size_p = sizes_choices.astype(np.float64) ** -float(size_skew)
+    size_p /= size_p.sum()
+
+    unit_sizes = []
+    pos = 0
+    while pos < n:
+        room = n - pos
+        if not unit_sizes and room >= max_cluster:
+            s = max_cluster                       # the tail always exists
+        elif room >= 2 and rng.random() < cluster_rate:
+            s = min(int(rng.choice(sizes_choices, p=size_p)), room)
+        else:
+            s = 1
+        unit_sizes.append(s)
+        pos += s
+    n_units = len(unit_sizes)
+
+    stride = max(key_space // (n_units + 2), 2)
+    keys = np.empty(n, np.int64)
+    alt = np.empty(n, np.int32)
+    feat = np.empty((n, feat_dim), np.float32)
+    sig = np.empty((n, sig_words), np.uint32)
+    unit_pos = []                                 # member positions per unit
+    n_typos = 0
+    pos = 0
+    for u, s in enumerate(unit_sizes):
+        ps = np.arange(pos, pos + s)
+        unit_pos.append(ps)
+        keys[ps] = (u + 1) * stride
+        alt[ps] = u
+        base = rng.normal(size=feat_dim).astype(np.float32)
+        usig = rng.integers(0, 2 ** 32, size=sig_words,
+                            dtype=np.uint64).astype(np.uint32)
+        if s == 1:
+            feat[ps] = base
+            sig[ps] = rng.integers(0, 2 ** 32, size=sig_words,
+                                   dtype=np.uint64).astype(np.uint32)
+        else:
+            feat[ps] = base[None, :] + 0.01 * rng.normal(
+                size=(s, feat_dim)).astype(np.float32)
+            sig[ps] = usig[None, :]
+            if typo_rate:
+                # corrupt keys of members 1.. (member 0 keeps the true key)
+                bad = ps[1:][rng.random(s - 1) < typo_rate]
+                keys[bad] = (rng.integers(1, n_units + 1, size=bad.size)
+                             * stride
+                             + rng.integers(1, stride, size=bad.size))
+                n_typos += int(bad.size)
+        pos += s
+    feat /= np.linalg.norm(feat, axis=1, keepdims=True) + 1e-9
+
+    perm = rng.permutation(n)                     # eid != generation order
+    inv = np.argsort(perm)                        # original pos -> eid
+    ents = E.make_entities(
+        keys[perm].astype(np.int32), np.arange(n, dtype=np.int32),
+        payload={"feat": jnp.asarray(feat[perm]),
+                 "sig": jnp.asarray(sig[perm]),
+                 "alt": jnp.asarray(alt[perm], jnp.int32)})
+
+    gold = set()
+    for ps in unit_pos:
+        if ps.size < 2:
+            continue
+        eids = np.sort(inv[ps])
+        for a in range(eids.size):
+            for b in range(a + 1, eids.size):
+                gold.add((int(eids[a]), int(eids[b])))
+    if gold:
+        arr = np.asarray(sorted(gold), np.uint64)
+        gold_packed = np.unique((arr[:, 0] << np.uint64(32)) | arr[:, 1])
+    else:
+        gold_packed = np.empty((0,), np.uint64)
+    return TruthCorpus(ents=ents, gold=frozenset(gold),
+                       gold_packed=gold_packed, n=n, n_units=n_units,
+                       max_cluster=max_cluster,
+                       max_block=max(unit_sizes), n_typos=n_typos)

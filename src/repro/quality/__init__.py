@@ -1,0 +1,24 @@
+"""repro.quality — ground-truth match-quality measurement (DESIGN.md §14).
+
+Everything the repo measured before this subsystem was bit-parity against
+its OWN oracle; nothing asked whether the emitted pairs find the true
+duplicates.  This package closes that gap:
+
+  * ``QualityMetrics`` / ``evaluate`` — pairs-completeness, pairs-quality,
+    reduction ratio, and F-measure of any resolve result against a gold
+    pair set (packed-uint64 set algebra, no Python pair loops);
+  * ``attach`` — surface those metrics on ``ERMetrics.quality`` of an
+    ERResult / MultiPassResult / StreamResult;
+  * ``weff_for_keys`` — the adaptive-window map: per-entity effective
+    windows from a ``KeyProfile``'s block densities (the device band and
+    the host oracle both consume it).
+
+The labeled corpus generator lives in ``repro.data.truth``
+(``labeled_corpus``); the pruning lever in ``core.window
+.prune_low_evidence``.  Together they draw the pairs-completeness vs
+reduction-ratio Pareto of ``benchmarks/run.py --only recall``.
+"""
+from repro.quality.adaptive import weff_for_keys
+from repro.quality.metrics import QualityMetrics, attach, evaluate
+
+__all__ = ["QualityMetrics", "attach", "evaluate", "weff_for_keys"]

@@ -1,0 +1,49 @@
+"""Adaptive window sizing — duplicate-density-driven per-entity windows.
+
+Papadakis et al. (arXiv:1905.06167) name density-adaptive windows as the
+standard recall lever over fixed-w Sorted Neighborhood: where the key
+profile shows a dense block (many entities sharing one blocking key —
+likely duplicate clusters plus their collisions), the window should grow to
+cover the whole block; in sparse regions it should stay small so the
+reduction ratio survives.
+
+The realization here is a PURE FUNCTION of the global ``KeyProfile``:
+
+    weff(entity) = clip(count(entity.key), window, window_max)
+
+Per-entity (not per-shard) effective windows make every existing invariant
+hold for free: weff rides the payload as a traced ``_weff`` field, so it
+follows entities through shuffles, halos, boundary groups, and stream
+chunking, while the band program itself compiles ONCE at ``window_max``
+(the executable-cache key never sees the profile).  The pair (i, i+d)
+exists iff d < weff[i+d] — the LATER element owns the comparison, the same
+ownership rule as the balance cost model, so a block of c <= window_max
+co-keyed entities is covered completely: its k-th member owns intra-block
+distances 1..k-1 < c <= weff.
+
+Streamed == monolithic (invariant 9) also follows: the merged streaming
+profile holds exactly the full corpus's per-key counts, so every chunk
+computes the same weff the monolithic resolve does.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.balance.profile import KeyProfile
+
+
+def weff_for_keys(keys, profile: KeyProfile, window: int,
+                  window_max: int) -> np.ndarray:
+    """Per-entity effective windows: ``clip(block_count(key), window,
+    window_max)`` for each entry of ``keys``, int32.
+
+    Keys absent from the profile (possible only for padding slots — the
+    profile is built from the same key set) fall back to ``window``."""
+    keys = np.asarray(keys, np.int64)
+    weff = np.full(keys.shape, window, np.int64)
+    if profile.n_blocks:
+        idx = np.searchsorted(profile.uniq, keys)
+        idx = np.minimum(idx, profile.n_blocks - 1)
+        found = profile.uniq[idx] == keys
+        weff[found] = np.clip(profile.counts[idx][found], window, window_max)
+    return weff.astype(np.int32)

@@ -58,13 +58,15 @@ VERSION = 1
 _CFG_FIELDS = ("window", "variant", "hops", "cap_factor", "return_scores",
                "band_engine", "band_block", "cand_cap", "band_interpret",
                "emit", "pair_cap", "jit_cache", "on_overflow", "retry_limit",
-               "runner", "num_shards", "partitioner", "linkage")
+               "runner", "num_shards", "partitioner", "linkage",
+               "window_policy", "window_max", "prune_policy",
+               "prune_threshold")
 _PASS_FIELDS = ("name", "source", "kind", "offset", "width", "index")
 
 _COUNTERS = ("chunks", "carry_total", "degenerate", "steady", "hits",
              "misses", "traces", "overflow", "cand_overflow",
-             "matcher_evals", "pair_overflow", "retries", "escalations",
-             "device_bytes")
+             "matcher_evals", "pair_overflow", "pruned", "retries",
+             "escalations", "device_bytes")
 
 
 def _slug(label: str) -> str:

@@ -58,6 +58,7 @@ from repro.api.results import BlockingResult, ERMetrics, compute_metrics
 from repro.api.variants import get_variant
 from repro.core import entities as E
 from repro.core import sn
+from repro.quality import adaptive as QA
 from repro.perf import cache as PC
 # the leaf retry module only (never the package __init__): repro.resilience
 # imports checkpoint -> stream.store -> this module, so importing the
@@ -275,6 +276,15 @@ def _stream_pass_body(raw: ChunkStore, cfg: ERConfig, spec,
                       ckpt=None, fault=None):
     """``_stream_pass`` proper (the wrapper above only opens the pass's
     root span so every phase below nests under it)."""
+    w_base = cfg.window
+    if cfg.window_policy == "adaptive":
+        # the same rewrite facade._adaptive_rewrite applies: the band
+        # program (and every derived width — seam carry, combined_cap,
+        # halo validation) runs at window_max; per-chunk weff is computed
+        # below from the MERGED profile, whose per-key counts are exactly
+        # the monolithic corpus's — so streamed weff == monolithic weff
+        # and invariant 9 holds unchanged
+        cfg = cfg.with_(window=cfg.window_max)
     w, r = cfg.window, runner.shards
     variant = get_variant(cfg.variant)
     with OBS.span("sort_runs"):
@@ -308,6 +318,7 @@ def _stream_pass_body(raw: ChunkStore, cfg: ERConfig, spec,
     load_max = np.zeros(r, np.int64)
     cand_max = np.zeros(r, np.int64)
     overflow = cand_overflow = matcher_evals = pair_overflow = 0
+    pruned = 0
     chunks = steady = degenerate = carry_total = 0
     hits = misses = traces = 0
     retries = escalations = 0
@@ -334,6 +345,7 @@ def _stream_pass_body(raw: ChunkStore, cfg: ERConfig, spec,
         cand_overflow = state["cand_overflow"]
         matcher_evals = state["matcher_evals"]
         pair_overflow = state["pair_overflow"]
+        pruned = state.get("pruned", 0)
         retries, escalations = state["retries"], state["escalations"]
         device_bytes = state["device_bytes"]
         if state["load_max"]:
@@ -366,6 +378,14 @@ def _stream_pass_body(raw: ChunkStore, cfg: ERConfig, spec,
             n_comb = int(combined["key"].shape[0])
             n_carry = n_comb - n_nat
             padded = _host_pad(combined, combined_cap)
+            if cfg.window_policy == "adaptive":
+                # weff rides only the per-chunk PADDED COPY — the carry
+                # (and its checkpointed form) keeps the raw payload
+                # schema, so host_concat sees matching fields every chunk
+                padded = dict(padded, payload=dict(
+                    padded["payload"],
+                    _weff=QA.weff_for_keys(np.asarray(padded["key"]),
+                                           profile, w_base, w)))
             dev = E.make_entities(padded["key"], padded["eid"],
                                   payload=padded["payload"],
                                   valid=padded["valid"])
@@ -399,6 +419,7 @@ def _stream_pass_body(raw: ChunkStore, cfg: ERConfig, spec,
             cand_overflow += po.cand_overflow
             matcher_evals += po.matcher_evals
             pair_overflow += po.pair_overflow
+            pruned += po.pruned
             device_bytes = max(device_bytes,
                                _entity_bytes(padded) + 4 * combined_cap)
 
@@ -409,8 +430,14 @@ def _stream_pass_body(raw: ChunkStore, cfg: ERConfig, spec,
                 # NOT the variant-faithful set: like facade._host_oracle,
                 # the metric must EXPOSE SRP's missed boundary pairs, not
                 # absolve them
-                pairs = sn.sequential_sn_pairs(combined["key"],
-                                               combined["eid"], w)
+                if cfg.window_policy == "adaptive":
+                    cw = QA.weff_for_keys(np.asarray(combined["key"]),
+                                          profile, w_base, w)
+                    pairs = sn.adaptive_sn_pairs(combined["key"],
+                                                 combined["eid"], cw)
+                else:
+                    pairs = sn.sequential_sn_pairs(combined["key"],
+                                                   combined["eid"], w)
                 if cfg.linkage and "src" in combined["payload"]:
                     pairs = LK.filter_cross_source(
                         pairs, combined["eid"], combined["payload"]["src"])
@@ -441,6 +468,7 @@ def _stream_pass_body(raw: ChunkStore, cfg: ERConfig, spec,
                         cand_overflow=int(cand_overflow),
                         matcher_evals=int(matcher_evals),
                         pair_overflow=int(pair_overflow),
+                        pruned=int(pruned),
                         retries=retries, escalations=escalations,
                         device_bytes=int(device_bytes),
                         load_max=[int(x) for x in load_max],
@@ -462,7 +490,7 @@ def _stream_pass_body(raw: ChunkStore, cfg: ERConfig, spec,
         variant=cfg.variant, runner=runner.name, window=w, num_shards=r,
         cand_count=tuple(int(x) for x in cand_max),
         cand_overflow=cand_overflow, matcher_evals=matcher_evals,
-        pair_overflow=pair_overflow)
+        pair_overflow=pair_overflow, pruned=pruned)
     metrics = None
     if oracle is not None:
         metrics = compute_metrics(blocking.pairs, oracle, total_comparisons)

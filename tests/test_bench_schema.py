@@ -1,0 +1,81 @@
+"""Committed BENCH_*.json artifacts must stay loadable and schema-current.
+
+Every blob ``benchmarks.run.write_bench`` emits carries the shared
+``schema_version`` (``repro.obs.SCHEMA_VERSION``) and a ``machine_proxy_s``
+host-speed proxy; perf_smoke refuses blobs whose version drifted.  This
+tier-1 test applies the same refusal to the COMMITTED copies: bumping the
+schema without regenerating the committed baselines fails here, not in a
+silently-wrong perf comparison.  ``BENCH_obs_trace.json`` is a Chrome
+trace export (a different artifact class) and is exempt."""
+import json
+import os
+import sys
+
+import pytest
+
+from repro.obs import SCHEMA_VERSION
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCHES = sorted(
+    f for f in os.listdir(ROOT)
+    if f.startswith("BENCH_") and f.endswith(".json"))
+
+
+def _load(name):
+    with open(os.path.join(ROOT, name)) as f:
+        return json.load(f)
+
+
+def _is_chrome_trace(blob):
+    return isinstance(blob, dict) and "traceEvents" in blob
+
+
+def test_expected_baselines_are_committed():
+    """The perf-smoke + quality gates need their committed baselines."""
+    assert "BENCH_band_engine.json" in BENCHES
+    assert "BENCH_recall.json" in BENCHES
+    assert len(BENCHES) >= 4
+
+
+@pytest.mark.parametrize("name", BENCHES)
+def test_committed_bench_schema(name):
+    blob = _load(name)
+    if _is_chrome_trace(blob):
+        pytest.skip("Chrome trace export — not a write_bench blob")
+    assert blob.get("schema_version") == SCHEMA_VERSION, (
+        f"{name}: schema_version={blob.get('schema_version')!r} != "
+        f"{SCHEMA_VERSION} — regenerate with `python -m benchmarks.run` "
+        f"(write_bench stamps the shared version)")
+    proxy = blob.get("machine_proxy_s")
+    assert isinstance(proxy, float) and 0.0 < proxy < 60.0, (
+        f"{name}: machine_proxy_s={proxy!r} — the host-speed proxy used "
+        f"for cross-machine normalization is missing or implausible")
+
+
+@pytest.mark.parametrize("name", BENCHES)
+def test_committed_bench_passes_perf_smoke_schema(name):
+    """The exact checker CI runs agrees (no drift between this test and
+    benchmarks.perf_smoke.check_schema)."""
+    blob = _load(name)
+    if _is_chrome_trace(blob):
+        pytest.skip("Chrome trace export — not a write_bench blob")
+    sys.path.insert(0, ROOT)
+    try:
+        from benchmarks.perf_smoke import check_schema
+    finally:
+        sys.path.pop(0)
+    assert check_schema(blob, name) == []
+
+
+def test_committed_recall_passes_quality_gates():
+    """The committed BENCH_recall.json must satisfy the same structural
+    gates perf_smoke --recall enforces on fresh runs: Pareto points
+    present, adaptive dominating the mid fixed window, the clean-corpus
+    full-window PC=1.0 gate, pruning engaged without dropping gold pairs,
+    and streamed/traced parity bits all true."""
+    sys.path.insert(0, ROOT)
+    try:
+        from benchmarks.perf_smoke import check_recall
+    finally:
+        sys.path.pop(0)
+    assert check_recall(_load("BENCH_recall.json")) == []

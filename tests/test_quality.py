@@ -1,0 +1,301 @@
+"""Ground-truth match quality (ISSUE 10): the repro.quality harness.
+
+  * labeled-corpus construction: deterministic gold pair sets, one key
+    block per duplicate cluster, typo corruption bounded and recoverable
+  * metric math: PC / PQ / RR / F computed exactly from packed pair sets
+  * the clean-corpus full-window gate: boundary-complete SN at
+    w >= max block with pruning off is exhaustive (PC = 1.0)
+  * multi-pass PC >= single-pass, and adaptive-window PC >= fixed-w at
+    equal-or-better reduction ratio — all 3 variants x {scan, pallas}
+  * adaptive runs keep sequential == device parity and an oracle-complete
+    metrics shortcut
+  * evidence pruning (meta-blocking): scan == pallas == sequential pair
+    sets AND pruned counters, and invariant 14 — no pair whose cheap
+    evidence clears the threshold is ever pruned (checked literally
+    against host-recomputed evidence, gold and non-gold alike)
+  * config-surface validation for the four new quality levers
+"""
+import numpy as np
+import pytest
+
+from repro import api, quality, stream
+from repro.core import entities as E
+from repro.core import window as W
+from repro.core.match import cosine_sim, jaccard_sig, default_matcher
+from repro.data.truth import labeled_corpus
+
+R = 4
+VARIANTS = ["srp", "repsn", "jobsn"]
+ENGINES = ["scan", "pallas"]
+WBASE, WMID, WMAX = 4, 8, 12
+THR = 0.55
+
+
+def _cfg(**kw):
+    kw.setdefault("window", WBASE)
+    kw.setdefault("num_shards", R)
+    kw.setdefault("variant", "repsn")
+    kw.setdefault("hops", R - 1)
+    kw.setdefault("runner", "vmap")
+    return api.ERConfig(**kw)
+
+
+def _adaptive(**kw):
+    kw.setdefault("window_policy", "adaptive")
+    kw.setdefault("window_max", WMAX)
+    return _cfg(**kw)
+
+
+@pytest.fixture(scope="module")
+def clean():
+    return labeled_corpus(0, 600, max_cluster=WMAX, typo_rate=0.0)
+
+
+@pytest.fixture(scope="module")
+def dirty():
+    return labeled_corpus(1, 600, max_cluster=WMAX, typo_rate=0.12)
+
+
+# -- labeled corpus -----------------------------------------------------------
+
+def test_labeled_corpus_is_deterministic_and_consistent():
+    a = labeled_corpus(3, 500, max_cluster=10, typo_rate=0.2)
+    b = labeled_corpus(3, 500, max_cluster=10, typo_rate=0.2)
+    np.testing.assert_array_equal(np.asarray(a.ents["key"]),
+                                  np.asarray(b.ents["key"]))
+    assert a.gold == b.gold
+    np.testing.assert_array_equal(a.gold_packed, b.gold_packed)
+    assert a.n == 500 and a.max_block == a.max_cluster == 10
+    assert len(a.gold) == a.gold_packed.size       # packing is lossless
+    assert all(lo < hi for lo, hi in a.gold)
+    # the forced max cluster exists: some unit contributes C(10,2) pairs
+    assert len(a.gold) >= 45
+    assert 0 < a.n_typos < 500
+
+
+def test_labeled_corpus_gold_pairs_share_unit():
+    tc = labeled_corpus(4, 300, max_cluster=6)
+    alt = np.asarray(tc.ents["payload"]["alt"])
+    eids = np.asarray(tc.ents["eid"])
+    by_eid = np.empty(tc.n, np.int32)
+    by_eid[eids] = alt
+    assert all(by_eid[lo] == by_eid[hi] for lo, hi in tc.gold)
+    # and completeness: every unit of size c contributes C(c,2) pairs
+    _, counts = np.unique(alt, return_counts=True)
+    assert len(tc.gold) == int((counts * (counts - 1) // 2).sum())
+
+
+def test_labeled_corpus_validation():
+    with pytest.raises(ValueError, match="max_cluster"):
+        labeled_corpus(0, 100, max_cluster=1)
+    with pytest.raises(ValueError, match="typo_rate"):
+        labeled_corpus(0, 100, typo_rate=1.0)
+
+
+# -- metric math --------------------------------------------------------------
+
+def test_metric_math_exact():
+    """PC/PQ/RR/F from hand-countable sets: 6 gold, blocked catches 4 of
+    them in 10 candidates out of 45 possible comparisons."""
+    gold = [(0, 1), (0, 2), (1, 2), (3, 4), (3, 5), (4, 5)]
+    blocked = [(0, 1), (0, 2), (1, 2), (3, 4),
+               (6, 7), (6, 8), (7, 8), (0, 9), (1, 9), (2, 9)]
+
+    class Truth:
+        n = 10
+        gold_packed = np.unique(
+            np.asarray([(a << 32) | b for a, b in gold], np.uint64))
+
+    q = quality.evaluate(
+        np.asarray([(a << 32) | b for a, b in blocked], np.uint64), Truth())
+    assert q.gold_pairs == 6 and q.blocked_pairs == 10
+    assert q.true_positives == 4
+    assert q.pairs_completeness == pytest.approx(4 / 6)
+    assert q.pairs_quality == pytest.approx(4 / 10)
+    assert q.total_comparisons == 45
+    assert q.reduction_ratio == pytest.approx(1 - 10 / 45)
+    pc, pq = 4 / 6, 4 / 10
+    assert q.f_measure == pytest.approx(2 * pc * pq / (pc + pq))
+
+
+def test_attach_surfaces_quality_on_metrics(clean):
+    res = api.resolve(clean.ents, _cfg(window=WMAX, compute_metrics=True))
+    out = quality.attach(res, clean)
+    assert out.metrics.quality is not None
+    assert out.metrics.quality.pairs_completeness == 1.0
+    assert out.metrics.quality.gold_pairs == len(clean.gold)
+    # the oracle-relative completeness the repo always reported is intact
+    assert out.metrics.pairs_completeness == 1.0
+
+
+# -- the full-window gate -----------------------------------------------------
+
+@pytest.mark.parametrize("variant", ["repsn", "jobsn"])
+def test_full_window_clean_corpus_is_exhaustive(clean, variant):
+    """Pruning off + w >= the largest key block: boundary-complete SN
+    must find every gold pair (the PC=1.0 gate BENCH_recall.json keeps)."""
+    res = api.resolve(clean.ents, _cfg(window=clean.max_block,
+                                       variant=variant))
+    q = quality.evaluate(res, clean)
+    assert q.pairs_completeness == 1.0
+    assert q.true_positives == q.gold_pairs == len(clean.gold)
+
+
+# -- multi-pass PC >= single-pass ---------------------------------------------
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_multipass_pc_geq_single_pass(dirty, variant, engine):
+    """The alt-key pass recovers typo-corrupted cluster members: union PC
+    is strictly above the key-only pass for boundary-complete variants
+    (srp keeps >=: partition cuts apply to both runs)."""
+    cfg = _cfg(window=WMAX, variant=variant, band_engine=engine)
+    single = quality.evaluate(api.resolve(dirty.ents, cfg), dirty)
+    multi_cfg = cfg.with_(passes=(
+        api.SortKeySpec(name="key"),
+        api.SortKeySpec(name="alt", source="alt", kind="identity")))
+    multi = quality.evaluate(api.resolve(dirty.ents, multi_cfg), dirty)
+    if variant == "srp":
+        assert multi.pairs_completeness >= single.pairs_completeness
+    else:
+        assert single.pairs_completeness < 1.0          # typos really bite
+        assert multi.pairs_completeness > single.pairs_completeness
+
+
+# -- adaptive windows dominate fixed-w ----------------------------------------
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_adaptive_pc_geq_fixed_at_better_rr(clean, variant, engine):
+    """window_policy='adaptive' (base WBASE grown to block density, cap
+    WMAX) reaches PC >= a fixed mid window at equal-or-better reduction
+    ratio — strictly higher PC for boundary-complete variants (the fixed
+    window misses far pairs inside blocks wider than WMID)."""
+    fixed = quality.evaluate(
+        api.resolve(clean.ents, _cfg(window=WMID, variant=variant,
+                                     band_engine=engine)), clean)
+    adapt = quality.evaluate(
+        api.resolve(clean.ents, _adaptive(variant=variant,
+                                          band_engine=engine)), clean)
+    assert adapt.blocked_pairs <= fixed.blocked_pairs   # equal-or-better RR
+    assert adapt.reduction_ratio >= fixed.reduction_ratio
+    if variant == "srp":
+        assert adapt.pairs_completeness >= fixed.pairs_completeness
+    else:
+        assert adapt.pairs_completeness == 1.0          # weff covers blocks
+        assert fixed.pairs_completeness < 1.0
+
+
+def test_adaptive_sequential_matches_device(clean):
+    """The sequential reference runner computes the same adaptive pair set
+    as the vmapped band engines, and the adaptive oracle scores the run
+    complete (compute_metrics uses the per-entity weff oracle)."""
+    dev = api.resolve(clean.ents, _adaptive(compute_metrics=True))
+    seq = api.resolve(clean.ents, _adaptive(runner="sequential"))
+    assert dev.pairs == seq.pairs
+    assert dev.matches == seq.matches
+    assert dev.metrics.pairs_completeness == 1.0
+
+
+def test_adaptive_config_is_cache_distinct():
+    """window_policy/window_max/prune_* enter the executable fingerprint:
+    two configs differing only in quality levers never share executables."""
+    a = _cfg().static_fingerprint()
+    b = _adaptive().static_fingerprint()
+    c = _cfg(prune_policy="evidence", prune_threshold=THR)\
+        .static_fingerprint()
+    assert len({a, b, c}) == 3
+
+
+# -- evidence pruning (meta-blocking) -----------------------------------------
+
+def _host_evidence(ents, pairs):
+    """Recompute each pair's cheap evidence exactly as the engines do:
+    the cheap cascade prefix (cosine on feat + jaccard on sig)."""
+    split = W.split_cascade(default_matcher(), ents["payload"])
+    eids = np.asarray(ents["eid"])
+    row = np.empty(eids.max() + 1, np.int64)
+    row[eids] = np.arange(eids.size)
+    arr = np.asarray(sorted(pairs), np.int64)
+    ra, rb = row[arr[:, 0]], row[arr[:, 1]]
+    feat = np.asarray(ents["payload"]["feat"])
+    sig = np.asarray(ents["payload"]["sig"])
+    ev = split.w_cos * np.asarray(cosine_sim(feat[ra], feat[rb])) \
+        + split.w_jac * np.asarray(jaccard_sig(sig[ra], sig[rb]))
+    return {tuple(p): float(e) for p, e in zip(map(tuple, arr), ev)}, split
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_prune_engine_parity_and_counter(dirty, engine):
+    """scan, pallas and the sequential reference agree bit-identically on
+    the pruned pair set AND on the pruned counter."""
+    cfg = _adaptive(band_engine=engine, prune_policy="evidence",
+                    prune_threshold=THR)
+    dev = api.resolve(dirty.ents, cfg)
+    seq = api.resolve(dirty.ents, cfg.with_(runner="sequential"))
+    assert dev.pairs == seq.pairs
+    assert dev.matches == seq.matches
+    assert dev.blocking.pruned == seq.blocking.pruned > 0
+
+
+def test_prune_never_drops_evidence_above_threshold(dirty):
+    """Invariant 14, literally: every candidate the unpruned run blocks
+    whose host-recomputed cheap evidence clears the threshold survives
+    pruning — gold pairs and impostors alike — and everything pruned
+    scored below the bar."""
+    base = api.resolve(dirty.ents, _adaptive())
+    pruned = api.resolve(dirty.ents,
+                         _adaptive(prune_policy="evidence",
+                                   prune_threshold=THR))
+    assert pruned.pairs < base.pairs                   # it really pruned
+    assert pruned.blocking.pruned == len(base.pairs) - len(pruned.pairs)
+    ev, split = _host_evidence(dirty.ents, base.pairs)
+    bar = THR * (split.w_cos + split.w_jac)
+    for pair, e in ev.items():
+        if e >= bar + 1e-4:
+            assert pair in pruned.pairs, (pair, e)
+        elif e < bar - 1e-4:
+            assert pair not in pruned.pairs, (pair, e)
+    # on this corpus the gold separation is wide: no gold pair was lost
+    assert quality.evaluate(pruned, dirty).true_positives == \
+        quality.evaluate(base, dirty).true_positives
+
+
+def test_prune_requires_cascade_matcher(dirty):
+    """Evidence pruning needs a splittable cascade (a cheap prefix to
+    score); a matcher without one fails loudly, not silently unpruned."""
+    from repro.core.match import CascadeMatcher, Matcher
+    opaque = CascadeMatcher(matchers=(
+        Matcher(field="feat", kind="edit", weight=1.0, cost=1.0),),
+        threshold=0.5)
+    cfg = _cfg(matcher=opaque, prune_policy="evidence",
+               prune_threshold=THR)
+    with pytest.raises(ValueError, match="cheap"):
+        api.resolve(dirty.ents, cfg)
+
+
+# -- config surface -----------------------------------------------------------
+
+def test_quality_config_validation():
+    with pytest.raises(ValueError, match="window_policy"):
+        _cfg(window_policy="magic")
+    with pytest.raises(ValueError, match="window_max"):
+        _cfg(window_policy="adaptive", window_max=2)    # < window
+    with pytest.raises(ValueError, match="window_max"):
+        _cfg(window_max=WMAX)                           # without adaptive
+    with pytest.raises(ValueError, match="band_block"):
+        _adaptive(band_engine="pallas", band_block=8, window_max=64)
+    with pytest.raises(ValueError, match="linkage"):
+        _adaptive(linkage=True)
+    with pytest.raises(ValueError, match="prune_policy"):
+        _cfg(prune_policy="magic")
+    with pytest.raises(ValueError, match="prune_threshold"):
+        _cfg(prune_policy="evidence", prune_threshold=1.0)
+    with pytest.raises(ValueError, match="prune_threshold"):
+        _cfg(prune_threshold=0.5)                       # without evidence
+
+
+def test_adaptive_is_not_servable():
+    with pytest.raises(ValueError, match="adaptive"):
+        api.serve(_adaptive())
+

@@ -9,6 +9,10 @@
     monolithic and streamed; linkage streams untag correctly
   * streaming machinery units: external merge ordering, rechunking, the
     disk spool roundtrip, steady-state chunk accounting
+  * quality levers (ISSUE 10): adaptive-window (+ evidence-pruned)
+    streams run the same random-chunking bit-parity matrix and the
+    checkpoint kill/resume path without breaking invariants 9/11 — the
+    merged KeyProfile reproduces the monolithic per-entity weff exactly
 """
 import numpy as np
 import pytest
@@ -355,3 +359,98 @@ def test_plan_from_profile_matches_plan_shards(ents):
         np.testing.assert_array_equal(np.asarray(full.rank_bounds),
                                       np.asarray(prof.rank_bounds))
         assert prof.rank_granular == (full.dest is not None)
+
+
+# -- quality levers: adaptive windows + pruning stream bit-identically --------------
+
+def _adaptive_cfg(**kw):
+    kw.setdefault("window", 3)
+    kw.setdefault("window_policy", "adaptive")
+    kw.setdefault("window_max", 10)
+    return _cfg(**kw)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_adaptive_stream_bit_identical(ents, variant, engine):
+    """Invariant 9 under window_policy='adaptive': the streamed run's
+    merged profile yields the monolithic per-entity weff, so chunked
+    resolution over the window_max carry is bit-identical."""
+    cfg = _adaptive_cfg(variant=variant, band_engine=engine)
+    mono = api.resolve(ents, cfg)
+    res = stream.resolve_stream(_even_chunks(ents, 175), cfg,
+                                chunk_size=175)
+    assert res.pairs == mono.pairs
+    assert res.matches == mono.matches
+    assert res.stream.chunks == 4
+    # the carry keeps window_max-1 rows per seam: wider than fixed-w
+    assert res.stream.carry_entities == (cfg.window_max - 1) * 3
+
+
+def test_adaptive_prune_random_chunkings_property(ents):
+    """The full quality path (adaptive windows + evidence pruning) over
+    random input chunk sizes AND random device chunk_size reproduces the
+    monolithic pair sets; the streamed pruned counter can only over-count
+    (carry overlap re-prunes), never under-count."""
+    cfg = _adaptive_cfg(prune_policy="evidence", prune_threshold=0.55)
+    mono = api.resolve(ents, cfg)
+    assert mono.blocking.pruned > 0            # the lever really engaged
+    for seed in range(3):
+        rng = np.random.default_rng(seed)
+        sizes, left = [], N
+        while left:
+            s = int(rng.integers(1, min(left, 130) + 1))
+            sizes.append(s)
+            left -= s
+        chunk_size = int(rng.integers(2, 140))
+        res = stream.resolve_stream(_chunks_of(ents, sizes), cfg,
+                                    chunk_size=chunk_size)
+        assert res.pairs == mono.pairs, (seed, sizes, chunk_size)
+        assert res.matches == mono.matches, (seed, sizes, chunk_size)
+        assert res.blocking.pruned >= mono.blocking.pruned
+
+
+def test_adaptive_multipass_stream_equals_monolithic(ents):
+    cfg = _adaptive_cfg(passes=_passes())
+    mono = api.resolve(ents, cfg)
+    res = stream.resolve_stream(_even_chunks(ents, 175), cfg,
+                                chunk_size=175)
+    assert res.pairs == mono.pairs
+    assert res.matches == mono.matches
+
+
+def test_adaptive_prune_checkpoint_kill_resume(tmp_path, ents):
+    """Invariant 11 holds for the quality path: a checkpointed adaptive +
+    pruned stream killed mid-run resumes to the bit-identical union, and
+    the resumed pruned counter matches an uninterrupted stream's."""
+    from repro.resilience import FaultPlan, InjectedFault
+    cfg = _adaptive_cfg(prune_policy="evidence", prune_threshold=0.55)
+    mono = api.resolve(ents, cfg)
+    plain = stream.resolve_stream(_even_chunks(ents, 140), cfg,
+                                  chunk_size=140)
+    for k in (1, 3):
+        d = str(tmp_path / f"kill{k}")
+        with pytest.raises(InjectedFault):
+            stream.resolve_stream(_even_chunks(ents, 140), cfg,
+                                  chunk_size=140, checkpoint_dir=d,
+                                  fault_plan=FaultPlan(crash_after_chunk=k))
+        res = api.resume(d)
+        assert res.pairs == mono.pairs, k
+        assert res.matches == mono.matches, k
+        assert res.blocking.pruned == plain.blocking.pruned, k
+
+
+def test_stream_weff_matches_monolithic_profile(ents):
+    """The incrementally merged KeyProfile reproduces the full-corpus
+    per-entity effective windows exactly (the reason invariant 9 extends
+    to adaptive runs)."""
+    from repro.quality import weff_for_keys
+    keys = np.asarray(ents["key"])
+    full = B.profile_keys(keys, window=3)
+    merged = B.KeyProfile.empty(3)
+    for part in np.array_split(keys, 6):
+        merged = merged.merge(B.profile_keys(part, window=3))
+    np.testing.assert_array_equal(
+        weff_for_keys(keys, full, 3, 10),
+        weff_for_keys(keys, merged, 3, 10))
+    assert weff_for_keys(keys, full, 3, 10).max() > 3   # density engaged
